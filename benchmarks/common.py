@@ -1,0 +1,63 @@
+"""Benchmark helpers: timing, CSV emission, baselines.
+
+The paper's "CPU" baseline is a sequential scalar LU; ours is the numpy
+rank-1-update loop (single core, no XLA fusion) — the honest host baseline.
+The "GPU" analogue on this container is the jit-compiled vectorized EbV
+path (XLA CPU): the comparison measures the *vectorization/parallelization*
+win, which is the paper's claim; absolute GTX280 numbers are not
+reproducible (EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds per call (blocks on jax arrays)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(r, jax.Array) else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        if isinstance(r, jax.Array):
+            r.block_until_ready()
+        elif isinstance(r, (tuple, list)):
+            jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# sequential scalar baselines (the paper's "CPU" column)
+# ---------------------------------------------------------------------------
+def numpy_lu_baseline(a: np.ndarray) -> np.ndarray:
+    a = a.copy()
+    n = a.shape[0]
+    for k in range(n - 1):
+        a[k + 1 :, k] /= a[k, k]
+        a[k + 1 :, k + 1 :] -= np.outer(a[k + 1 :, k], a[k, k + 1 :])
+    return a
+
+
+def numpy_banded_baseline(arow: np.ndarray, bw: int) -> np.ndarray:
+    ap = np.concatenate([arow.copy(), np.zeros((bw, arow.shape[1]), arow.dtype)], 0)
+    n = arow.shape[0]
+    w = 2 * bw + 1
+    for k in range(n - 1):
+        pivot = ap[k, bw]
+        u_tail = ap[k, bw + 1 :]
+        for s in range(1, bw + 1):
+            l = ap[k + s, bw - s] / pivot
+            ap[k + s, bw - s] = l
+            lo = bw + 1 - s
+            ap[k + s, lo : lo + bw] -= l * u_tail
+    return ap[:n]

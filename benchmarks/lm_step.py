@@ -1,0 +1,34 @@
+"""Framework-level step benchmark: reduced-config train and decode steps
+per architecture family (CPU wall-clock; tok/s derived)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import lm
+from .common import emit, time_call
+
+ARCHS = ["llama3_8b", "granite_moe_1b_a400m", "mamba2_1_3b", "hymba_1_5b"]
+B, S = 2, 128
+
+
+def run(full: bool = False):
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": tokens}
+
+        loss_fn = jax.jit(jax.grad(lambda p: lm.train_loss(p, batch, cfg)[0]))
+        t_train = time_call(lambda: jax.tree.leaves(loss_fn(params))[0])
+        emit(f"lm_step_{arch}_train", t_train, f"tok/s={B * S / t_train:,.0f}")
+
+        caches, _ = jax.jit(lambda p: lm.prefill(p, batch, cfg, cache_len=S + 8))(params)
+        dec = jax.jit(lambda p, c, t: lm.decode_step(p, c, t, jnp.asarray(S, jnp.int32), cfg))
+        t_dec = time_call(dec, params, caches, tokens[:, :1])
+        emit(f"lm_step_{arch}_decode", t_dec, f"tok/s={B / t_dec:,.0f}")
+
+
+if __name__ == "__main__":
+    run()

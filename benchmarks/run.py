@@ -1,0 +1,42 @@
+"""Benchmark driver — one module per paper table + the framework step bench.
+
+Prints ``name,us_per_call,derived`` CSV (brief contract).  ``--full`` runs
+the paper's full matrix sizes (up to 16000); default sizes keep the suite
+CPU-friendly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-size matrices (slow)")
+    ap.add_argument(
+        "--only", default=None,
+        choices=["table1", "table2", "table3", "lm_step"],
+    )
+    args = ap.parse_args()
+
+    from . import table1_sparse, table2_dense, table3_transfer, lm_step
+
+    print("name,us_per_call,derived")
+    mods = {
+        "table1": table1_sparse,
+        "table2": table2_dense,
+        "table3": table3_transfer,
+        "lm_step": lm_step,
+    }
+    for name, mod in mods.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(full=args.full)
+        except Exception as e:  # keep the suite going; a failed table is a bug
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

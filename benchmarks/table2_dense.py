@@ -1,0 +1,33 @@
+"""Paper Table 2: dense LU factorization+solve times and speedup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocked_lu, lu_solve, make_diagonally_dominant
+from .common import emit, numpy_lu_baseline, time_call
+
+SIZES = [256, 512, 1024, 2048]
+FULL_SIZES = [500, 1000, 2000, 4000, 8000]
+
+
+def run(full: bool = False):
+    sizes = FULL_SIZES if full else SIZES
+    for n in sizes:
+        a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+        block = min(256, max(32, n // 8))
+        ebv = jax.jit(lambda a, b: lu_solve(blocked_lu(a, block=block), b))
+        t_ebv = time_call(ebv, a, b)
+
+        a_np = np.asarray(a, np.float64)
+        t_base = time_call(lambda: numpy_lu_baseline(a_np), iters=1)
+
+        emit(f"table2_dense_n{n}_ebv", t_ebv, f"speedup={t_base / t_ebv:.1f}")
+        emit(f"table2_dense_n{n}_baseline", t_base, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Table 3: host↔device transfer times for the benchmark matrices."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from .common import emit, time_call
+
+SIZES = [500, 1000, 2000, 4000]
+FULL_SIZES = SIZES + [8000, 16000]
+
+
+def run(full: bool = False):
+    dev = jax.devices()[0]
+    for n in FULL_SIZES if full else SIZES:
+        host = np.random.default_rng(n).normal(size=(n, n)).astype(np.float32)
+
+        def to_dev():
+            return jax.device_put(host, dev).block_until_ready()
+
+        t_to = time_call(to_dev)
+        on_dev = jax.device_put(host, dev)
+
+        def from_dev():
+            return np.asarray(on_dev)
+
+        t_from = time_call(from_dev)
+        emit(f"table3_transfer_n{n}_to_device", t_to, f"GB/s={host.nbytes / t_to / 1e9:.2f}")
+        emit(f"table3_transfer_n{n}_from_device", t_from, f"GB/s={host.nbytes / t_from / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""CFD pressure-solve example — the paper authors' own domain.
+
+A 2-D Poisson problem (5-point stencil) on an nx×ny grid is a banded system
+with bandwidth nx: exactly the "sparse" matrices of paper Table 1.  Solved
+with the banded EbV LU (naturally equalized vectors, DESIGN.md §4) and
+validated against a dense solve.
+
+    PYTHONPATH=src python examples/cfd_poisson.py [--nx 24 --ny 24]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import banded_lu, banded_solve, to_banded
+
+
+def poisson_2d(nx, ny):
+    """5-point Laplacian (Dirichlet), slightly regularized → diagonally
+    dominant, matching the paper's no-pivot contract."""
+    n = nx * ny
+    a = np.zeros((n, n), np.float32)
+    for j in range(ny):
+        for i in range(nx):
+            p = j * nx + i
+            a[p, p] = 4.05
+            if i > 0:
+                a[p, p - 1] = -1.0
+            if i < nx - 1:
+                a[p, p + 1] = -1.0
+            if j > 0:
+                a[p, p - nx] = -1.0
+            if j < ny - 1:
+                a[p, p + nx] = -1.0
+    return jnp.asarray(a)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nx", type=int, default=24)
+    ap.add_argument("--ny", type=int, default=24)
+    args = ap.parse_args()
+    nx, ny = args.nx, args.ny
+    n = nx * ny
+
+    a = poisson_2d(nx, ny)
+    # source term: point charge in the middle
+    rhs = np.zeros((n,), np.float32)
+    rhs[(ny // 2) * nx + nx // 2] = 1.0
+    b = jnp.asarray(rhs)
+
+    bw = nx  # stencil bandwidth
+    arow = to_banded(a, bw)
+    solver = jax.jit(lambda ab, b: banded_solve(banded_lu(ab, bw=bw), b, bw=bw))
+    x = solver(arow, b).block_until_ready()
+    t0 = time.perf_counter()
+    x = solver(arow, b).block_until_ready()
+    dt = time.perf_counter() - t0
+
+    res = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+    x_ref = jnp.linalg.solve(a, b)
+    err = float(jnp.abs(x - x_ref).max())
+    print(f"grid {nx}x{ny} (n={n}, bandwidth={bw})")
+    print(f"banded EbV solve: {dt * 1e3:.2f} ms   residual={res:.2e}   vs-dense max|Δ|={err:.2e}")
+    field = np.asarray(x).reshape(ny, nx)
+    print(f"pressure field: min={field.min():.4f} max={field.max():.4f} (peak at source ✓)")
+    assert res < 1e-5
+
+
+if __name__ == "__main__":
+    main()

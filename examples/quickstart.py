@@ -1,0 +1,50 @@
+"""Quickstart: solve a diagonally-dominant dense system with the EbV LU
+solver (paper-faithful and blocked paths), validate against jnp.linalg.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 512]
+"""
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    blocked_lu, ebv_lu, linear_solve, lu_solve, make_diagonally_dominant,
+    equalized_pairing, pair_lengths,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    args = ap.parse_args()
+    n = args.n
+
+    key = jax.random.PRNGKey(0)
+    a = make_diagonally_dominant(key, n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+
+    print(f"EbV work units for n=8: {equalized_pairing(8)} lengths={pair_lengths(8)}")
+    print(f"(every full pair sums to n — the paper's equalization invariant)\n")
+
+    for name, fn in [
+        ("paper-faithful (unblocked bi-vectorized)", lambda: lu_solve(ebv_lu(a), b)),
+        ("TPU-adapted (blocked rank-k)", lambda: lu_solve(blocked_lu(a, block=128), b)),
+        ("public API linear_solve", lambda: linear_solve(a, b, method="ebv_blocked")),
+        ("jnp.linalg.solve (reference)", lambda: jnp.linalg.solve(a, b)),
+    ]:
+        jitted = jax.jit(fn)
+        x = jitted().block_until_ready()  # compile+run
+        t0 = time.perf_counter()
+        x = jitted().block_until_ready()
+        dt = time.perf_counter() - t0
+        res = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+        print(f"{name:42s} {dt * 1e3:8.2f} ms   residual={res:.2e}")
+
+
+if __name__ == "__main__":
+    main()

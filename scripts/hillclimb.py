@@ -1,0 +1,82 @@
+"""§Perf hillclimb runner: compile tagged variants of the three chosen cells
+and print before/after roofline terms.
+
+    PYTHONPATH=src python scripts/hillclimb.py --step <name>
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+OUT = os.path.abspath("artifacts/dryrun")
+
+STEPS = {
+    # (arch, cell, tag, rules_preset, overrides)
+    "llama_prefill_tri": ("llama3_8b", "prefill_32k", "_tri", "default", {"attention_schedule": "tri"}),
+    "mixtral_train_tri": ("mixtral_8x22b", "train_4k", "_tri", "default", {"attention_schedule": "tri"}),
+    "mixtral_train_cap1": ("mixtral_8x22b", "train_4k", "_cap1", "default", {"moe_capacity_factor": 1.0}),
+    "mixtral_train_tricap": ("mixtral_8x22b", "train_4k", "_tricap", "default",
+                             {"attention_schedule": "tri", "moe_capacity_factor": 1.0}),
+    "llama_train_zero3": ("llama3_8b", "train_4k", "_zero3", "zero3", {}),
+    "starcoder_train_zero3": ("starcoder2_3b", "train_4k", "_zero3", "zero3", {}),
+    "llama_prefill_ebv": ("llama3_8b", "prefill_32k", "_ebv", "default",
+                          {"attention_schedule": "ebv"}),
+    "llama_train_ebv": ("llama3_8b", "train_4k", "_ebv", "default",
+                        {"attention_schedule": "ebv"}),
+    "mixtral_train_ebv": ("mixtral_8x22b", "train_4k", "_ebv", "default",
+                          {"attention_schedule": "ebv"}),
+    "mixtral_train_ebvcap": ("mixtral_8x22b", "train_4k", "_ebvcap", "default",
+                             {"attention_schedule": "ebv", "moe_capacity_factor": 1.0}),
+    "nemotron_train_ebv": ("nemotron_4_340b", "train_4k", "_ebv", "default",
+                           {"attention_schedule": "ebv"}),
+    "deepseek_prefill_ebv": ("deepseek_67b", "prefill_32k", "_ebv", "default",
+                             {"attention_schedule": "ebv"}),
+    "deepseek_train_zero3": ("deepseek_67b", "train_4k", "_zero3", "zero3", {}),
+    "mixtral_train_dots": ("mixtral_8x22b", "train_4k", "_dots", "default", {"remat_policy": "dots"}),
+    "deepseek_train_dots": ("deepseek_67b", "train_4k", "_dots", "default", {"remat_policy": "dots"}),
+    "deepseek_train_ebv": ("deepseek_67b", "train_4k", "_ebv", "default",
+                           {"attention_schedule": "ebv"}),
+}
+
+
+def terms(r):
+    c = r["cost"]
+    return dict(
+        compute_s=c["flops_per_device"] / PEAK,
+        memory_s=c["bytes_per_device"] / HBM,
+        collective_s=c["wire_bytes_per_device"] / ICI,
+        peak_gib=r["memory"]["peak_bytes_est"] / 2**30,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--step", choices=list(STEPS), required=True)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    arch, cell, tag, preset, overrides = STEPS[args.step]
+
+    from repro.launch.dryrun import run_cell
+    from repro.dist.sharding import RULE_PRESETS
+
+    rec = run_cell(arch, cell, multi_pod=False, out_dir=OUT, force=args.force,
+                   rules=RULE_PRESETS[preset], tag=tag, overrides=overrides or None)
+    base = json.load(open(os.path.join(OUT, "single", f"{arch}__{cell}.json")))
+    if rec["status"] != "ok":
+        print("FAILED:", rec.get("error"))
+        return
+    tb, ta = terms(base), terms(rec)
+    print(f"\n{args.step}: {arch} × {cell}  ({tag} vs baseline)")
+    for k in tb:
+        delta = "" if tb[k] == 0 else f"  ({(1 - ta[k] / tb[k]) * +100:+.1f}% better)" if ta[k] <= tb[k] else f"  ({(ta[k] / tb[k] - 1) * 100:+.1f}% WORSE)"
+        print(f"  {k:14s} {tb[k]:10.4g} -> {ta[k]:10.4g}{delta}")
+    dom_b = max(("compute_s", "memory_s", "collective_s"), key=lambda k: tb[k])
+    dom_a = max(("compute_s", "memory_s", "collective_s"), key=lambda k: ta[k])
+    print(f"  dominant: {dom_b} -> {dom_a}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts (run at finish).
+
+    PYTHONPATH=src python scripts/make_reports.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import ARCH_IDS, SHAPE_CELLS
+from repro.launch.roofline import analyze, to_markdown  # noqa
+
+OUT = "artifacts/dryrun"
+V0 = "artifacts/dryrun_v0_baseline"
+
+
+def load(mesh, base=OUT):
+    rows = {}
+    d = os.path.join(base, mesh)
+    if not os.path.isdir(d):
+        return rows
+    for f in os.listdir(d):
+        if "__" not in f or not f.endswith(".json"):
+            continue
+        r = json.load(open(os.path.join(d, f)))
+        tag = f[:-5].split("__", 1)[1]
+        rows[(r["arch"], tag)] = r
+    return rows
+
+
+def dryrun_table():
+    out = ["| arch | cell | single: peak GiB / wire GiB / compile s | multi: peak GiB / wire GiB / compile s |",
+           "|---|---|---|---|"]
+    single, multi = load("single"), load("multi")
+    for arch in ARCH_IDS:
+        for cell in SHAPE_CELLS:
+            def fmt(rows):
+                r = rows.get((arch, cell))
+                if r is None:
+                    return "—"
+                if r["status"] == "skipped":
+                    return "skip (full attn)"
+                if r["status"] != "ok":
+                    return f"ERROR {r.get('error','')[:40]}"
+                return (f"{r['memory']['peak_bytes_est']/2**30:.1f} / "
+                        f"{r['cost']['wire_bytes_per_device']/2**30:.0f} / {r.get('compile_s',0):.0f}")
+            out.append(f"| {arch} | {cell} | {fmt(single)} | {fmt(multi)} |")
+    return "\n".join(out)
+
+
+def iter0_table():
+    v0, v1 = load("single", V0), load("single")
+    cells = [("nemotron_4_340b", "train_4k"), ("llama3_8b", "train_4k"),
+             ("starcoder2_3b", "train_4k"), ("mamba2_1_3b", "train_4k"),
+             ("hymba_1_5b", "train_4k"), ("deepseek_67b", "train_4k"),
+             ("qwen2_vl_2b", "train_4k"), ("whisper_tiny", "train_4k")]
+    out = ["| cell | wire GiB/dev before | after | Δ |", "|---|---|---|---|"]
+    for a, c in cells:
+        b, n = v0.get((a, c)), v1.get((a, c))
+        if not b or not n or b["status"] != "ok" or n["status"] != "ok":
+            continue
+        wb = b["cost"]["wire_bytes_per_device"] / 2**30
+        wn = n["cost"]["wire_bytes_per_device"] / 2**30
+        out.append(f"| {a} × {c} | {wb:,.0f} | {wn:,.0f} | {(1-wn/max(wb,1e-9))*100:+.0f}% |")
+    return "\n".join(out)
+
+
+def main():
+    md = open("EXPERIMENTS.md").read()
+    roof = to_markdown(analyze("single", os.path.abspath(OUT)), "single")
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roof + "\n### Dry-run summary (both meshes)\n\n" + dryrun_table() + "\n")
+    md = md.replace("<!-- ITER0_TABLE -->", iter0_table())
+    open("EXPERIMENTS.md", "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Compare dry-run artifact sets (§Perf before/after tables).
+
+    python scripts/perf_compare.py artifacts/dryrun_v0_baseline artifacts/dryrun [--mesh single] [--cells a__b ...]
+"""
+import argparse
+import json
+import os
+
+from_dir = None
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def load(d, mesh):
+    out = {}
+    p = os.path.join(d, mesh)
+    if not os.path.isdir(p):
+        return out
+    for f in os.listdir(p):
+        r = json.load(open(os.path.join(p, f)))
+        if r.get("status") == "ok":
+            out[f"{r['arch']}__{r['cell']}"] = r
+    return out
+
+
+def terms(r):
+    c = r["cost"]
+    return {
+        "compute_s": c["flops_per_device"] / PEAK,
+        "memory_s": c["bytes_per_device"] / HBM,
+        "collective_s": c["wire_bytes_per_device"] / ICI,
+        "peak_gib": r["memory"]["peak_bytes_est"] / 2**30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("before")
+    ap.add_argument("after")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--cells", nargs="*", default=None)
+    args = ap.parse_args()
+    b = load(args.before, args.mesh)
+    a = load(args.after, args.mesh)
+    keys = args.cells or sorted(set(b) & set(a))
+    print("| cell | compute s (b→a) | memory s (b→a) | collective s (b→a) | peak GiB (b→a) | dominant after |")
+    print("|---|---|---|---|---|---|")
+    for k in keys:
+        if k not in b or k not in a:
+            continue
+        tb, ta = terms(b[k]), terms(a[k])
+        dom = max(("compute_s", "memory_s", "collective_s"), key=lambda x: ta[x])
+        fmt = lambda x, y: f"{x:.3g} → {y:.3g} ({'–' if x==0 else f'{(1 - y/x)*100:+.0f}%'[:6]})" if x != y else f"{x:.3g}"
+        print(f"| {k} | {fmt(tb['compute_s'], ta['compute_s'])} | {fmt(tb['memory_s'], ta['memory_s'])} | "
+              f"{fmt(tb['collective_s'], ta['collective_s'])} | {tb['peak_gib']:.1f} → {ta['peak_gib']:.1f} | {dom.split('_')[0]} |")
+
+
+if __name__ == "__main__":
+    main()

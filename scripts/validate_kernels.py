@@ -1,0 +1,28 @@
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import make_diagonally_dominant, to_banded
+from repro.kernels import ops, ref
+from repro.kernels import ebv_lu as k
+
+key = jax.random.PRNGKey(0)
+for n in (32, 128, 257):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    r = ref.lu_ref(np.asarray(a))
+    got = ops.lu(a, impl="pallas_vmem")
+    print(f"vmem n={n}:", np.abs(np.asarray(got) - r).max())
+for n in (64, 256):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + 1), n)
+    r = ref.lu_ref(np.asarray(a))
+    got = ops.lu(a, impl="pallas_blocked", block=32, col_tile=32)
+    print(f"blocked n={n}:", np.abs(np.asarray(got) - r).max())
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, 4))
+    x = ops.lu_solve(got, b)
+    xr = ref.solve_ref(r, np.asarray(b))
+    print(f"solve n={n}:", np.abs(np.asarray(x) - xr).max())
+# banded
+n, bw = 200, 4
+ad = make_diagonally_dominant(jax.random.PRNGKey(9), n, sparse_band=bw)
+arow = to_banded(ad, bw)
+got = ops.banded_lu(arow, bw=bw)
+r = ref.banded_lu_ref(np.asarray(arow), bw)
+print("banded:", np.abs(np.asarray(got) - r).max())
+print("OK")

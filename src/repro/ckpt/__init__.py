@@ -1,0 +1,2 @@
+"""Fault-tolerant elastic checkpointing."""
+from .manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,3 @@
+from .base import (
+    ModelConfig, ShapeCell, SHAPE_CELLS, ARCH_IDS, get_config, cell_applicable, all_cells,
+)

@@ -1,0 +1,42 @@
+"""EbV (Equal bi-Vectorized) LU decomposition — the paper's contribution.
+
+Layers:
+  * ``ebv``          — paper-faithful unblocked bi-vectorized LU + the
+                       r ↔ n-2-r equalization schedule.
+  * ``blocked``      — TPU-adapted rank-k (MXU) blocked LU.
+  * ``solve``        — vectorized substitution phases + ``linear_solve`` API.
+  * ``banded``       — the paper's "sparse" (CFD stencil) path.
+  * ``batched``      — vmapped many-small-systems path (optimizer use).
+  * ``distributed``  — multi-chip shard_map factorization with EbV-folded
+                       block placement.
+"""
+from .ebv import (
+    ebv_lu,
+    ebv_step,
+    equalized_pairing,
+    pair_lengths,
+    fold_index,
+    unpack_lu,
+    reconstruct,
+    make_diagonally_dominant,
+)
+from .blocked import blocked_lu, panel_factor, ebv_folded_owners, cyclic_owners
+from .solve import (
+    forward_substitution,
+    backward_substitution,
+    lu_solve,
+    linear_solve,
+)
+from .banded import to_banded, from_banded, banded_lu, banded_solve, banded_lu_solve
+from .batched import batched_ebv_lu, batched_lu_solve, batched_linear_solve
+from .distributed import distributed_blocked_lu, distributed_lu_solve, placement_tables
+
+__all__ = [
+    "ebv_lu", "ebv_step", "equalized_pairing", "pair_lengths", "fold_index",
+    "unpack_lu", "reconstruct", "make_diagonally_dominant",
+    "blocked_lu", "panel_factor", "ebv_folded_owners", "cyclic_owners",
+    "forward_substitution", "backward_substitution", "lu_solve", "linear_solve",
+    "to_banded", "from_banded", "banded_lu", "banded_solve", "banded_lu_solve",
+    "batched_ebv_lu", "batched_lu_solve", "batched_linear_solve",
+    "distributed_blocked_lu", "distributed_lu_solve", "placement_tables",
+]

@@ -1,0 +1,120 @@
+"""Banded ("sparse") EbV LU.
+
+The paper's sparse matrices come from CFD stencils — banded systems.  For a
+bandwidth-``bw`` matrix every elimination bi-vector has length exactly
+``bw``: the vectors are *naturally equalized*, which is the EbV ideal case
+(DESIGN.md §4).
+
+Storage is row-aligned band form: ``arow[i, t] = A[i, i - bw + t]`` for
+``t ∈ [0, 2bw]`` (zero outside the matrix).  Factorization costs
+O(n·bw²) instead of O(n³).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "to_banded",
+    "from_banded",
+    "banded_lu",
+    "banded_solve",
+    "banded_lu_solve",
+]
+
+
+def to_banded(a: jax.Array, bw: int) -> jax.Array:
+    """Dense (n, n) → row-aligned band (n, 2bw+1)."""
+    n = a.shape[-1]
+    i = jnp.arange(n)[:, None]
+    t = jnp.arange(2 * bw + 1)[None, :]
+    j = i - bw + t
+    valid = (j >= 0) & (j < n)
+    return jnp.where(valid, a[i, jnp.clip(j, 0, n - 1)], 0.0)
+
+
+def from_banded(arow: jax.Array) -> jax.Array:
+    """Row-aligned band (n, 2bw+1) → dense (n, n)."""
+    n, w = arow.shape
+    bw = (w - 1) // 2
+    i = jnp.arange(n)[:, None]
+    t = jnp.arange(w)[None, :]
+    j = i - bw + t
+    dense = jnp.zeros((n, n), arow.dtype)
+    return dense.at[i, jnp.clip(j, 0, n - 1)].add(jnp.where((j >= 0) & (j < n), arow, 0.0))
+
+
+def _update_indices(bw: int) -> tuple[np.ndarray, np.ndarray]:
+    """Static gather map for the shifted-window rank-1 band update.
+
+    For row offset ``s`` (1..bw) the touched columns of the row-band are
+    ``t = bw+1-s .. 2bw-s`` and they consume ``u_tail[c - (bw+1-s)]``.
+    """
+    s = np.arange(1, bw + 1)[:, None]  # (bw, 1)
+    c = np.arange(2 * bw + 1)[None, :]  # (1, 2bw+1)
+    src = c - (bw + 1 - s)
+    valid = (src >= 0) & (src < bw)
+    return np.clip(src, 0, bw - 1), valid
+
+
+@functools.partial(jax.jit, static_argnames=("bw",))
+def banded_lu(arow: jax.Array, *, bw: int) -> jax.Array:
+    """No-pivot LU on the row-aligned band; factors packed in place
+    (``L`` strictly left of the centre diagonal, unit diagonal implicit)."""
+    n = arow.shape[0]
+    pad = jnp.zeros((bw, 2 * bw + 1), arow.dtype)
+    ap = jnp.concatenate([arow, pad], axis=0)  # (n+bw, 2bw+1)
+    src_idx, src_valid = _update_indices(bw)
+    src_idx = jnp.asarray(src_idx)
+    src_valid = jnp.asarray(src_valid)
+    anti = (jnp.arange(bw), bw - 1 - jnp.arange(bw))  # L positions in the window
+
+    def body(k, ap):
+        pivot = ap[k, bw]
+        window = jax.lax.dynamic_slice(ap, (k + 1, 0), (bw, 2 * bw + 1))
+        # bi-vector: the L-column lives on the window's anti-diagonal …
+        l = window[anti] / pivot
+        # … and the U-row is the pivot row's upper tail.
+        u_tail = jax.lax.dynamic_slice(ap, (k, bw + 1), (1, bw))[0]
+        upd = l[:, None] * jnp.where(src_valid, u_tail[src_idx], 0.0)
+        window = window - upd
+        window = window.at[anti].set(l)
+        return jax.lax.dynamic_update_slice(ap, window, (k + 1, 0))
+
+    ap = jax.lax.fori_loop(0, n - 1, body, ap)
+    return ap[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bw",))
+def banded_solve(lu_band: jax.Array, b: jax.Array, *, bw: int) -> jax.Array:
+    """Forward+backward substitution on the packed band factors."""
+    n = lu_band.shape[0]
+
+    # forward: y_i = b_i − Σ_t L[i, i-bw+t] · y_{i-bw+t}
+    ypad = jnp.concatenate([jnp.zeros((bw,), b.dtype), b])
+
+    def fwd(i, ypad):
+        window = jax.lax.dynamic_slice(ypad, (i,), (bw,))  # y_{i-bw} … y_{i-1}
+        yi = ypad[i + bw] - jnp.dot(lu_band[i, :bw], window)
+        return ypad.at[i + bw].set(yi)
+
+    ypad = jax.lax.fori_loop(0, n, fwd, ypad)
+
+    # backward: x_i = (y_i − Σ_t U[i, i+t] · x_{i+t}) / U[i, i]
+    xpad = jnp.concatenate([ypad[bw:], jnp.zeros((bw,), b.dtype)])
+
+    def bwd(j, xpad):
+        i = n - 1 - j
+        window = jax.lax.dynamic_slice(xpad, (i + 1,), (bw,))  # x_{i+1} … x_{i+bw}
+        xi = (xpad[i] - jnp.dot(lu_band[i, bw + 1 :], window)) / lu_band[i, bw]
+        return xpad.at[i].set(xi)
+
+    xpad = jax.lax.fori_loop(0, n, bwd, xpad)
+    return xpad[:n]
+
+
+def banded_lu_solve(arow: jax.Array, b: jax.Array, *, bw: int) -> jax.Array:
+    return banded_solve(banded_lu(arow, bw=bw), b, bw=bw)

@@ -1,0 +1,72 @@
+"""Blocked (rank-k) EbV LU — the TPU-adapted fast path.
+
+The paper's rank-1 updates have O(1) FLOP/byte arithmetic intensity: fine for
+a 2008 GPU's scalar ALUs, hopeless against an MXU.  The adaptation keeps the
+paper's two invariants while blocking for the MXU:
+
+* **bi-vectorization** → the *fused panel step*: the pivot-scaled L-column
+  block and the trsm-produced U-row block of the same step are computed
+  together and consumed by one rank-``b`` GEMM update (one pass over the
+  trailing matrix instead of the paper's two vector passes per step).
+* **equalization** → the tile/owner schedules exported here
+  (:func:`ebv_folded_owners`) pair wide early panels with narrow late panels
+  so per-executor work is equal — the r ↔ n-2-r pairing at block granularity.
+
+Shapes shrink statically (Python loop under ``jit``), so no masking waste.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .solve import unit_lower_solve_packed
+
+__all__ = ["panel_factor", "blocked_lu", "ebv_folded_owners", "cyclic_owners"]
+
+
+def panel_factor(panel: jax.Array) -> jax.Array:
+    """Unblocked bi-vectorized LU of a tall ``(m, b)`` panel (pivots in the
+    top ``b`` rows, no pivoting — paper contract)."""
+    m, bw = panel.shape
+    rows = jnp.arange(m)
+    cols = jnp.arange(bw)
+
+    def body(k, p):
+        pivot = p[k, k]
+        l_col = jnp.where(rows > k, p[:, k] / pivot, 0.0)
+        u_row = jnp.where(cols > k, p[k, :], 0.0)
+        p = p - l_col[:, None] * u_row[None, :]
+        return p.at[:, k].set(jnp.where(rows > k, l_col, p[:, k]))
+
+    return jax.lax.fori_loop(0, bw, body, panel)
+
+
+def blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
+    """Right-looking blocked EbV LU on a packed square array."""
+    n = a.shape[-1]
+    block = min(block, n)
+    for k0 in range(0, n, block):
+        b = min(block, n - k0)
+        panel = panel_factor(a[k0:, k0 : k0 + b])
+        a = a.at[k0:, k0 : k0 + b].set(panel)
+        if k0 + b < n:
+            l11 = panel[:b]  # packed: unit-lower + U11
+            # fused bi-vector step: U-row block via trsm against the unit-lower
+            # panel factor, immediately consumed by the rank-b update.
+            u12 = unit_lower_solve_packed(l11, a[k0 : k0 + b, k0 + b :])
+            a = a.at[k0 : k0 + b, k0 + b :].set(u12)
+            l21 = panel[b:]
+            a = a.at[k0 + b :, k0 + b :].add(-(l21 @ u12))
+    return a
+
+
+def cyclic_owners(num_blocks: int, num_executors: int) -> list[int]:
+    """Standard block-cyclic owner schedule (ScaLAPACK-style baseline)."""
+    return [k % num_executors for k in range(num_blocks)]
+
+
+def ebv_folded_owners(num_blocks: int, num_executors: int) -> list[int]:
+    """EbV-folded owner schedule: panels ``k`` and ``nb-1-k`` (whose trailing
+    work sums to a constant) go to the same executor — equalized cumulative
+    panel work, the paper's pairing at block granularity."""
+    return [min(k, num_blocks - 1 - k) % num_executors for k in range(num_blocks)]

@@ -1,0 +1,199 @@
+"""Multi-chip EbV LU via ``jax.shard_map`` — block-cyclic / EbV-folded
+column placement over one mesh axis.
+
+The paper's equalization insight, lifted to chip granularity (DESIGN.md §2):
+panel ``k``'s trailing work is ∝ ``n − k·b``, so *paired* placement — panels
+``k`` and ``nb−1−k`` on the same chip — gives every chip an equal cumulative
+panel load (``ebv_folded``), vs. the standard ScaLAPACK ``cyclic`` baseline.
+Both placements are supported; the factorization math is placement-agnostic.
+
+Communication pattern per panel step (all expressible in XLA collectives):
+  1. owner's column panel is broadcast (masked ``psum``) — one (n, b) tensor;
+  2. every chip trsm-solves its own U12 columns and applies the rank-b
+     update to its local trailing tiles (no further communication).
+XLA's latency-hiding scheduler overlaps the next panel broadcast with the
+current trailing GEMM — the compute/comm overlap story for §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocked import panel_factor, cyclic_owners, ebv_folded_owners
+from .solve import unit_lower_solve_packed, backward_substitution, forward_substitution
+
+__all__ = ["placement_tables", "distributed_blocked_lu", "distributed_lu_solve"]
+
+
+def placement_tables(nb: int, num_devices: int, placement: str):
+    """Static (owners, slots, col_perm) for a column-block placement."""
+    if placement == "cyclic":
+        owners = cyclic_owners(nb, num_devices)
+    elif placement == "ebv_folded":
+        owners = ebv_folded_owners(nb, num_devices)
+    else:
+        raise ValueError(f"unknown placement {placement!r}")
+    counts = [owners.count(d) for d in range(num_devices)]
+    if len(set(counts)) != 1:
+        raise ValueError(
+            f"placement {placement!r} with nb={nb}, P={num_devices} is not "
+            f"load-balanced ({counts}); choose nb a multiple of "
+            f"{2 * num_devices if placement == 'ebv_folded' else num_devices}"
+        )
+    slots = []
+    used = [0] * num_devices
+    for k in range(nb):
+        slots.append(used[owners[k]])
+        used[owners[k]] += 1
+    return owners, slots, counts[0]
+
+
+def _column_tables(n: int, block: int, num_devices: int, placement: str):
+    nb = n // block
+    owners, slots, per_dev = placement_tables(nb, num_devices, placement)
+    n_local = per_dev * block
+    # global column index of each (device, local column)
+    col_table = np.zeros((num_devices, n_local), dtype=np.int32)
+    for k in range(nb):
+        col_table[owners[k], slots[k] * block : (slots[k] + 1) * block] = np.arange(
+            k * block, (k + 1) * block, dtype=np.int32
+        )
+    perm = col_table.reshape(-1)  # device-major column permutation
+    inv = np.argsort(perm)
+    return nb, owners, slots, col_table, perm, inv
+
+
+def _broadcast_panel(local, slot, block, owner, axis):
+    """Masked-psum broadcast of the owner's (n, block) column panel."""
+    cols = jax.lax.dynamic_slice_in_dim(local, slot * block, block, axis=1)
+    is_owner = jax.lax.axis_index(axis) == owner
+    return jax.lax.psum(jnp.where(is_owner, cols, 0.0), axis)
+
+
+def distributed_blocked_lu(
+    a: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis: str = "model",
+    block: int = 64,
+    placement: str = "ebv_folded",
+) -> jax.Array:
+    """Factorize a replicated (n, n) matrix across ``mesh[axis]``; returns the
+    packed LU replicated (gathered + unpermuted) for validation-scale use."""
+    n = a.shape[-1]
+    num_devices = mesh.shape[axis]
+    if n % block:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    nb, owners, slots, col_table, perm, inv = _column_tables(n, block, num_devices, placement)
+    col_table_j = jnp.asarray(col_table)
+
+    def local_fn(local):  # local: (n, n_local)
+        local = local[0] if local.ndim == 3 else local
+        gcol = col_table_j[jax.lax.axis_index(axis)]  # (n_local,)
+        for k in range(nb):
+            k0 = k * block
+            panel = _broadcast_panel(local, slots[k], block, owners[k], axis)
+            sub = panel_factor(panel[k0:])
+            panel = panel.at[k0:].set(sub)
+            # owner stores its factored panel
+            mine = jax.lax.dynamic_slice_in_dim(local, slots[k] * block, block, axis=1)
+            is_owner = jax.lax.axis_index(axis) == owners[k]
+            local = jax.lax.dynamic_update_slice_in_dim(
+                local, jnp.where(is_owner, panel, mine), slots[k] * block, axis=1
+            )
+            if k0 + block < n:
+                l11 = sub[:block]
+                colmask = (gcol >= k0 + block)[None, :]
+                rhs = local[k0 : k0 + block, :]
+                u12 = unit_lower_solve_packed(l11, rhs)
+                local = local.at[k0 : k0 + block, :].set(jnp.where(colmask, u12, rhs))
+                l21 = sub[block:]
+                local = local.at[k0 + block :, :].add(-(l21 @ jnp.where(colmask, u12, 0.0)))
+        return local[None]
+
+    from jax.sharding import PartitionSpec as P
+
+    fn = jax.jit(
+        jax.shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=P(axis, None, None),
+            out_specs=P(axis, None, None),
+        )
+    )
+    a_perm = a[:, perm]
+    # stack a device axis so shard_map distributes the permuted column groups
+    local_all = fn(a_perm.reshape(n, num_devices, -1).transpose(1, 0, 2))
+    out_perm = jnp.concatenate([local_all[d] for d in range(num_devices)], axis=1)
+    return out_perm[:, inv]
+
+
+def distributed_lu_solve(
+    a: jax.Array,
+    b: jax.Array,
+    mesh: jax.sharding.Mesh,
+    *,
+    axis: str = "model",
+    block: int = 64,
+    placement: str = "ebv_folded",
+) -> jax.Array:
+    """Distributed factorization + distributed two-phase substitution."""
+    n = a.shape[-1]
+    num_devices = mesh.shape[axis]
+    nb, owners, slots, col_table, perm, inv = _column_tables(n, block, num_devices, placement)
+
+    def local_fn(local, y):
+        local = local[0] if local.ndim == 3 else local
+        gcol = jnp.asarray(col_table)[jax.lax.axis_index(axis)]
+        # ---- factorization (same schedule as distributed_blocked_lu) ----
+        for k in range(nb):
+            k0 = k * block
+            panel = _broadcast_panel(local, slots[k], block, owners[k], axis)
+            sub = panel_factor(panel[k0:])
+            panel = panel.at[k0:].set(sub)
+            mine = jax.lax.dynamic_slice_in_dim(local, slots[k] * block, block, axis=1)
+            is_owner = jax.lax.axis_index(axis) == owners[k]
+            local = jax.lax.dynamic_update_slice_in_dim(
+                local, jnp.where(is_owner, panel, mine), slots[k] * block, axis=1
+            )
+            if k0 + block < n:
+                l11 = sub[:block]
+                colmask = (gcol >= k0 + block)[None, :]
+                rhs = local[k0 : k0 + block, :]
+                u12 = unit_lower_solve_packed(l11, rhs)
+                local = local.at[k0 : k0 + block, :].set(jnp.where(colmask, u12, rhs))
+                l21 = sub[block:]
+                local = local.at[k0 + block :, :].add(-(l21 @ jnp.where(colmask, u12, 0.0)))
+        # ---- forward substitution (y replicated; one panel broadcast/step) --
+        for k in range(nb):
+            k0 = k * block
+            panel = _broadcast_panel(local, slots[k], block, owners[k], axis)
+            yk = forward_substitution(panel[k0 : k0 + block], y[k0 : k0 + block])
+            y = y.at[k0 : k0 + block].set(yk)
+            if k0 + block < n:
+                y = y.at[k0 + block :].add(-(panel[k0 + block :] @ yk))
+        # ---- backward substitution --------------------------------------
+        for k in reversed(range(nb)):
+            k0 = k * block
+            panel = _broadcast_panel(local, slots[k], block, owners[k], axis)
+            xk = backward_substitution(panel[k0 : k0 + block], y[k0 : k0 + block])
+            y = y.at[k0 : k0 + block].set(xk)
+            if k0 > 0:
+                y = y.at[:k0].add(-(panel[:k0] @ xk))
+        return y
+
+    from jax.sharding import PartitionSpec as P
+
+    fn = jax.jit(
+        jax.shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(P(axis, None, None), P()),
+            out_specs=P(),
+        )
+    )
+    a_perm = a[:, perm].reshape(n, num_devices, -1).transpose(1, 0, 2)
+    return fn(a_perm, b)

@@ -1,0 +1,104 @@
+"""Triangular solves and the public ``linear_solve`` API.
+
+The substitution phases follow the paper's vectorized (column-oriented /
+"right-looking") form: after pivot ``k`` resolves, one fixed-shape masked
+axpy retires the whole remaining vector — the solve-phase analogue of the
+bi-vectorized elimination step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ebv as _ebv
+
+__all__ = [
+    "forward_substitution",
+    "backward_substitution",
+    "unit_lower_solve_packed",
+    "upper_solve_packed",
+    "lu_solve",
+    "linear_solve",
+]
+
+
+def _as_matrix(b):
+    if b.ndim == 1:
+        return b[:, None], True
+    return b, False
+
+
+def forward_substitution(lu: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve ``L y = b`` with the packed factor's implicit unit diagonal.
+
+    Column-oriented: once ``y[k]`` is final, a masked axpy eliminates its
+    contribution from every later row in one vector op.
+    """
+    y, squeeze = _as_matrix(b)
+    n = lu.shape[-1]
+    rows = jnp.arange(n)
+
+    def body(k, y):
+        lk = jnp.where(rows > k, lu[:, k], 0.0)
+        return y - lk[:, None] * y[k][None, :]
+
+    y = jax.lax.fori_loop(0, n - 1, body, y)
+    return y[:, 0] if squeeze else y
+
+
+def backward_substitution(lu: jax.Array, y: jax.Array) -> jax.Array:
+    """Solve ``U x = y`` (diagonal of U lives on the packed diagonal)."""
+    x, squeeze = _as_matrix(y)
+    n = lu.shape[-1]
+    rows = jnp.arange(n)
+
+    def body(j, x):
+        k = n - 1 - j
+        xk = x[k] / lu[k, k]
+        x = x.at[k].set(xk)
+        uk = jnp.where(rows < k, lu[:, k], 0.0)
+        return x - uk[:, None] * xk[None, :]
+
+    x = jax.lax.fori_loop(0, n, body, x)
+    return x[:, 0] if squeeze else x
+
+
+def unit_lower_solve_packed(l_packed: jax.Array, b: jax.Array) -> jax.Array:
+    """Forward substitution against the strictly-lower part of a packed
+    square block (unit diagonal implicit).  Used by the blocked driver's
+    ``U12 = L11^{-1} A12`` step."""
+    return forward_substitution(l_packed, b)
+
+
+def upper_solve_packed(u_packed: jax.Array, b: jax.Array) -> jax.Array:
+    return backward_substitution(u_packed, b)
+
+
+def lu_solve(lu: jax.Array, b: jax.Array) -> jax.Array:
+    """Both substitution phases against a packed EbV factorization."""
+    return backward_substitution(lu, forward_substitution(lu, b))
+
+
+@functools.partial(jax.jit, static_argnames=("method", "block"))
+def linear_solve(a: jax.Array, b: jax.Array, *, method: str = "ebv_blocked", block: int = 256) -> jax.Array:
+    """Solve ``A x = b`` for diagonally-dominant ``A`` (paper contract, no
+    pivoting).
+
+    methods:
+      * ``"ebv"``          — paper-faithful unblocked bi-vectorized LU.
+      * ``"ebv_blocked"``  — TPU-adapted blocked (rank-k) EbV LU.
+      * ``"jnp"``          — ``jnp.linalg.solve`` (cross-check baseline).
+    """
+    if method == "jnp":
+        return jnp.linalg.solve(a, b)
+    if method == "ebv":
+        lu = _ebv.ebv_lu(a)
+    elif method == "ebv_blocked":
+        from . import blocked as _blocked
+
+        lu = _blocked.blocked_lu(a, block=block)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return lu_solve(lu, b)

@@ -1,0 +1,2 @@
+"""Deterministic shard-aware data pipeline."""
+from .pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (LU factorization).
+
+``<name>.py`` kernels + ``ops.py`` jit'd wrappers + ``ref.py`` numpy oracles.
+Validated in interpret mode on CPU; target is TPU v5e Mosaic.
+"""
+from . import ebv_lu, trsm, banded, ops, ref  # noqa: F401

@@ -1,0 +1,88 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``impl`` dispatch:
+  * ``"pallas_vmem"``    — whole-matrix VMEM kernel (n ≲ 4096 fp32).
+  * ``"pallas_blocked"`` — blocked driver: panel kernel + fused bi-vector
+                           step kernel per block column (rank-k updates).
+  * ``"xla"``            — the pure-jnp blocked path from :mod:`repro.core`.
+
+On CPU (this container) the Pallas paths run in interpret mode automatically;
+on TPU they lower to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocked as _core_blocked
+from repro.core import solve as _core_solve
+from repro.core import banded as _core_banded
+from . import ebv_lu as _k
+from . import trsm as _trsm
+from . import banded as _kbanded
+
+__all__ = ["lu", "lu_solve", "linear_solve", "banded_lu"]
+
+
+def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bool | None) -> jax.Array:
+    n = a.shape[-1]
+    block = min(block, n)
+    for k0 in range(0, n, block):
+        b = min(block, n - k0)
+        pan = _k.panel(a[k0:, k0 : k0 + b], interpret=interpret)
+        a = a.at[k0:, k0 : k0 + b].set(pan)
+        w = n - k0 - b
+        if w > 0:
+            ct = min(col_tile, w)
+            while w % ct:
+                ct //= 2
+            u12, trail = _k.fused_step(
+                pan, a[k0 : k0 + b, k0 + b :], a[k0 + b :, k0 + b :],
+                col_tile=ct, interpret=interpret,
+            )
+            a = a.at[k0 : k0 + b, k0 + b :].set(u12)
+            a = a.at[k0 + b :, k0 + b :].set(trail)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block", "col_tile", "interpret"))
+def lu(
+    a: jax.Array,
+    *,
+    impl: str = "pallas_blocked",
+    block: int = 256,
+    col_tile: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed EbV LU factorization (no pivoting — paper contract)."""
+    if impl == "pallas_vmem":
+        return _k.lu_vmem(a, interpret=interpret)
+    if impl == "pallas_blocked":
+        return _pallas_blocked_lu(a, block=block, col_tile=col_tile, interpret=interpret)
+    if impl == "xla":
+        return _core_blocked.blocked_lu(a, block=block)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
+def lu_solve(lu_packed: jax.Array, b: jax.Array, *, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+    if impl == "pallas":
+        return _trsm.solve_vmem(lu_packed, b, interpret=interpret)
+    if impl == "xla":
+        return _core_solve.lu_solve(lu_packed, b)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def linear_solve(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    return lu_solve(lu(a, **{k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}), b)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "impl", "interpret"))
+def banded_lu(arow: jax.Array, *, bw: int, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+    if impl == "pallas":
+        return _kbanded.banded_lu_kernelized(arow, bw=bw, interpret=interpret)
+    if impl == "xla":
+        return _core_banded.banded_lu(arow, bw=bw)
+    raise ValueError(f"unknown impl {impl!r}")

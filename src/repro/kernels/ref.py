@@ -1,0 +1,96 @@
+"""Pure oracles for every Pallas kernel (numpy float64, loop-level naive).
+
+These are deliberately the dumbest correct implementations — independent of
+both the Pallas kernels and the vectorized :mod:`repro.core` paths — so the
+allclose sweeps in ``tests/test_kernels.py`` anchor three implementations
+against each other.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "lu_ref",
+    "panel_ref",
+    "solve_ref",
+    "forward_ref",
+    "backward_ref",
+    "banded_lu_ref",
+    "update_ref",
+    "fused_step_ref",
+]
+
+
+def lu_ref(a) -> np.ndarray:
+    """Doolittle LU, no pivoting, packed (unit lower implicit)."""
+    a = np.array(a, dtype=np.float64)
+    n = a.shape[0]
+    for k in range(n - 1):
+        a[k + 1 :, k] /= a[k, k]
+        a[k + 1 :, k + 1 :] -= np.outer(a[k + 1 :, k], a[k, k + 1 :])
+    return a
+
+
+def panel_ref(p) -> np.ndarray:
+    """Tall-panel LU: pivots in the top b rows."""
+    p = np.array(p, dtype=np.float64)
+    m, b = p.shape
+    for k in range(min(b, m - 1)):
+        p[k + 1 :, k] /= p[k, k]
+        p[k + 1 :, k + 1 : b] -= np.outer(p[k + 1 :, k], p[k, k + 1 : b])
+    return p
+
+
+def forward_ref(lu, b) -> np.ndarray:
+    lu = np.asarray(lu, dtype=np.float64)
+    y = np.array(b, dtype=np.float64)
+    n = lu.shape[0]
+    for i in range(n):
+        y[i] = y[i] - lu[i, :i] @ y[:i]
+    return y
+
+
+def backward_ref(lu, y) -> np.ndarray:
+    lu = np.asarray(lu, dtype=np.float64)
+    x = np.array(y, dtype=np.float64)
+    n = lu.shape[0]
+    for i in range(n - 1, -1, -1):
+        x[i] = (x[i] - lu[i, i + 1 :] @ x[i + 1 :]) / lu[i, i]
+    return x
+
+
+def solve_ref(lu, b) -> np.ndarray:
+    return backward_ref(lu, forward_ref(lu, b))
+
+
+def update_ref(l21, u12, a22) -> np.ndarray:
+    return np.asarray(a22, np.float64) - np.asarray(l21, np.float64) @ np.asarray(u12, np.float64)
+
+
+def fused_step_ref(panel, a_top, a_trail):
+    """U12 = L11^{-1} A12 (unit-lower) then A22 - L21 @ U12."""
+    panel = np.asarray(panel, np.float64)
+    b = panel.shape[1]
+    l11 = np.tril(panel[:b], -1) + np.eye(b)
+    u12 = np.linalg.solve(l11, np.asarray(a_top, np.float64))
+    return u12, update_ref(panel[b:], u12, a_trail)
+
+
+def banded_lu_ref(arow, bw: int) -> np.ndarray:
+    """Band LU by densifying, factoring with :func:`lu_ref`, re-banding."""
+    arow = np.asarray(arow, np.float64)
+    n = arow.shape[0]
+    dense = np.zeros((n, n))
+    for i in range(n):
+        for t in range(2 * bw + 1):
+            j = i - bw + t
+            if 0 <= j < n:
+                dense[i, j] = arow[i, t]
+    lu = lu_ref(dense)
+    out = np.zeros_like(arow)
+    for i in range(n):
+        for t in range(2 * bw + 1):
+            j = i - bw + t
+            if 0 <= j < n:
+                out[i, t] = lu[i, j]
+    return out

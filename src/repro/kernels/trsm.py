@@ -1,0 +1,66 @@
+"""Pallas kernels for the substitution (solve) phases.
+
+Column-oriented vectorized substitution: once pivot ``k`` resolves, one
+masked axpy retires its contribution from every remaining row — the solve
+phase analogue of the bi-vectorized elimination step.  The RHS block is
+tiled over the grid; the packed LU stays VMEM-resident per program.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["solve_vmem"]
+
+
+def _solve_kernel(lu_ref, b_ref, x_ref, *, n: int):
+    lu = lu_ref[...]
+    y = b_ref[...]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def fwd(k, y):
+        lk = jnp.where(rows > k, jax.lax.dynamic_slice(lu, (0, k), (n, 1)), 0.0)
+        yk = jax.lax.dynamic_slice(y, (k, 0), (1, y.shape[1]))
+        return y - lk * yk
+
+    y = jax.lax.fori_loop(0, n - 1, fwd, y)
+
+    def bwd(j, x):
+        k = n - 1 - j
+        pivot = jax.lax.dynamic_slice(lu, (k, k), (1, 1))
+        xk = jax.lax.dynamic_slice(x, (k, 0), (1, x.shape[1])) / pivot
+        x = jax.lax.dynamic_update_slice(x, xk, (k, 0))
+        uk = jnp.where(rows < k, jax.lax.dynamic_slice(lu, (0, k), (n, 1)), 0.0)
+        return x - uk * xk
+
+    x_ref[...] = jax.lax.fori_loop(0, n, bwd, y)
+
+
+@functools.partial(jax.jit, static_argnames=("rhs_tile", "interpret"))
+def solve_vmem(
+    lu: jax.Array, b: jax.Array, *, rhs_tile: int = 256, interpret: bool | None = None
+) -> jax.Array:
+    """Solve ``(LU) x = b`` for packed ``lu`` (n, n) and RHS ``b`` (n,) or
+    (n, m); the RHS columns are tiled across the grid."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    squeeze = b.ndim == 1
+    bm = b[:, None] if squeeze else b
+    n, m = bm.shape
+    rt = min(rhs_tile, m)
+    assert m % rt == 0, (m, rt)
+    x = pl.pallas_call(
+        functools.partial(_solve_kernel, n=n),
+        grid=(m // rt,),
+        in_specs=[
+            pl.BlockSpec((n, n), lambda j: (0, 0)),
+            pl.BlockSpec((n, rt), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((n, rt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), bm.dtype),
+        interpret=interpret,
+    )(lu, bm)
+    return x[:, 0] if squeeze else x

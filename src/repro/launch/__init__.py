@@ -1,0 +1,2 @@
+"""Launchers: mesh, dry-run, roofline, train, serve.  (dryrun sets XLA
+device-count flags at module import — import it only as __main__.)"""

@@ -1,0 +1,33 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax initialization).
+
+Topology (TPU v5e target):
+  * single pod: (data=16, model=16) — 256 chips;
+  * multi-pod:  (pod=2, data=16, model=16) — 512 chips, the ``pod`` axis is
+    the cross-DCI data-parallel axis (gradient all-reduce only, optionally
+    int8-compressed — ``repro.train.grad_compress``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Arbitrary mesh (tests / examples / PP experiments)."""
+    return jax.make_mesh(
+        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+# v5e hardware constants used by the roofline analysis (EXPERIMENTS.md).
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link

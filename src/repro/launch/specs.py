@@ -1,0 +1,142 @@
+"""ShapeDtypeStruct input specs + sharding trees for every
+(architecture × shape-cell) dry-run function — the shannon/kernels pattern:
+weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist import sharding as sh
+from repro.models import lm
+from repro.train import optimizer as opt_lib
+from repro.train.loop import make_train_step
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+def batch_struct(cfg: ModelConfig, cell: ShapeCell):
+    b, s = cell.global_batch, cell.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        p = cfg.num_prefix_embeds
+        return {
+            "tokens": sds((b, s - p), jnp.int32),
+            "prefix_embeds": sds((b, p, cfg.d_model), dt),
+        }
+    if cfg.family == "encdec":
+        return {
+            "tokens": sds((b, s), jnp.int32),
+            "frames": sds((b, max(s // 4, 1), cfg.d_model), dt),
+        }
+    return {"tokens": sds((b, s), jnp.int32)}
+
+
+def batch_axes(cfg: ModelConfig):
+    ax = {"tokens": ("act_batch", None)}
+    if cfg.family == "vlm":
+        ax["prefix_embeds"] = ("act_batch", None, None)
+    if cfg.family == "encdec":
+        ax["frames"] = ("act_batch", None, None)
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# param / optimizer / cache specs
+# ---------------------------------------------------------------------------
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def optimizer_for(cfg: ModelConfig):
+    """AdamW; m/v in bf16 for the ≥100B configs so the step state fits v5e
+    HBM (EXPERIMENTS.md §Dry-run memory table)."""
+    big = cfg.d_model * cfg.d_ff * cfg.num_layers > 5e10  # ≈ >100B params
+    return opt_lib.adamw(
+        opt_lib.warmup_cosine(3e-4, 2000, 100_000),
+        state_dtype=jnp.bfloat16 if big else None,
+    )
+
+
+def opt_axes(cfg: ModelConfig, params_axes):
+    return {"step": (), "mu": params_axes, "nu": params_axes}
+
+
+def caches_struct(cfg: ModelConfig, cell: ShapeCell):
+    enc_len = max(cell.seq_len // 4, 1) if cfg.family == "encdec" else 0
+    return jax.eval_shape(
+        lambda: lm.init_caches(cfg, cell.global_batch, cell.seq_len, enc_len=enc_len)
+    )
+
+
+def caches_axes_tree(cfg: ModelConfig):
+    return lm.cache_axes(cfg)
+
+
+# ---------------------------------------------------------------------------
+# step functions per cell kind
+# ---------------------------------------------------------------------------
+def make_cell_fn(cfg: ModelConfig, cell: ShapeCell, *, kv_chunk: int = 1024):
+    """Returns (fn, args_struct, args_axes) for lowering."""
+    if cell.kind == "train":
+        optimizer = optimizer_for(cfg)
+        p_struct = params_struct(cfg)
+        n_params = sum(x.size for x in jax.tree.leaves(p_struct))
+        # ≥50B-param configs train with gradient-accumulation microbatches
+        # (production memory posture; see EXPERIMENTS.md §Dry-run)
+        microbatches = 8 if n_params > 2e11 else (4 if n_params > 5e10 else 1)
+        step = make_train_step(cfg, optimizer, microbatches=microbatches)
+        p_axes = lm.param_axes(cfg)
+        o_struct = jax.eval_shape(optimizer.init, p_struct)
+        args = (p_struct, o_struct, batch_struct(cfg, cell))
+        axes = (p_axes, opt_axes(cfg, p_axes), batch_axes(cfg))
+        return step, args, axes
+
+    if cell.kind == "prefill":
+        def fn(params, batch):
+            return lm.prefill(params, batch, cfg, kv_chunk=kv_chunk)
+
+        args = (params_struct(cfg), batch_struct(cfg, cell))
+        axes = (lm.param_axes(cfg), batch_axes(cfg))
+        return fn, args, axes
+
+    if cell.kind == "decode":
+        def fn(params, caches, tokens, pos):
+            return lm.decode_step(params, caches, tokens, pos, cfg)
+
+        args = (
+            params_struct(cfg),
+            caches_struct(cfg, cell),
+            sds((cell.global_batch, 1), jnp.int32),
+            sds((), jnp.int32),
+        )
+        axes = (
+            lm.param_axes(cfg),
+            caches_axes_tree(cfg),
+            ("act_batch", None),
+            (),
+        )
+        return fn, args, axes
+
+    raise ValueError(cell.kind)
+
+
+def shardings_for_args(args, axes, mesh, rules=None):
+    """NamedSharding pytree matching (args, axes)."""
+    def is_ax(x):
+        return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+    return jax.tree.map(
+        lambda ax, st: jax.sharding.NamedSharding(
+            mesh, sh.resolve_spec(st.shape, ax, mesh=mesh, rules=rules)
+        ),
+        axes, args, is_leaf=is_ax,
+    )

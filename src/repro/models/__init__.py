@@ -1,0 +1,2 @@
+"""The 10 assigned architectures: dense/MoE/SSM/hybrid/enc-dec/VLM families."""
+from . import common, blocks, lm, mamba2, moe  # noqa: F401

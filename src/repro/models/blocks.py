@@ -1,0 +1,156 @@
+"""Per-layer block definitions for every architecture family.
+
+A block is (init_fn, apply_fn) where apply is
+``(params, x, positions, mode, cache, cfg, enc_out) -> (x, new_cache, aux)``.
+All blocks are pre-norm residual.  The same block is stacked ``num_layers``
+times via ``lax.scan`` over stacked params (see ``lm.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import common as C
+from . import mamba2 as M
+from . import moe as MOE
+
+
+def init_block(key, cfg: ModelConfig, *, encoder: bool = False):
+    ks = C.split(key, 8)
+    p = {}
+    fam = "dense" if encoder else cfg.family
+    if fam in ("dense", "vlm", "moe", "hybrid", "encdec"):
+        p["ln_attn"] = C.init_norm(cfg)
+        p["attn"] = C.init_attention(ks[0], cfg)
+    if fam == "encdec":
+        p["ln_cross"] = C.init_norm(cfg)
+        p["cross"] = C.init_attention(ks[4], cfg)
+    if fam in ("dense", "vlm", "encdec"):
+        p["ln_mlp"] = C.init_norm(cfg)
+        p["mlp"] = C.init_mlp(ks[1], cfg)
+    if fam == "moe":
+        p["ln_mlp"] = C.init_norm(cfg)
+        p["moe"] = MOE.init_moe(ks[2], cfg)
+    if fam == "ssm":
+        p["ln_ssm"] = C.init_norm(cfg)
+        p["ssm"] = M.init_ssm(ks[3], cfg)
+    if fam == "hybrid":
+        # Hymba: attention and mamba heads in parallel on the same input,
+        # combined with learned per-channel gates.
+        p["ssm"] = M.init_ssm(ks[3], cfg)
+        p["beta_attn"] = (jnp.ones((cfg.d_model,), jnp.float32), ("embed",))
+        p["beta_ssm"] = (jnp.ones((cfg.d_model,), jnp.float32), ("embed",))
+        p["ln_mlp"] = C.init_norm(cfg)
+        p["mlp"] = C.init_mlp(ks[1], cfg)
+    return p
+
+
+def apply_block(
+    p, x, cfg: ModelConfig, *, positions, mode="train", cache=None,
+    enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None,
+):
+    """One decoder layer.  Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    fam = cfg.family
+    new_cache = {}
+
+    if fam in ("dense", "vlm", "moe", "encdec"):
+        h = C.apply_norm(p["ln_attn"], x, cfg.norm)
+        attn_out, ac = C.apply_attention_layer(
+            p["attn"], h, cfg, positions=positions, mode=mode,
+            cache=None if cache is None else cache["attn"], kv_chunk=kv_chunk,
+            cache_len=cache_len, seq_positions=seq_positions,
+        )
+        if ac is not None:
+            new_cache["attn"] = ac
+        x = x + attn_out
+        if fam == "encdec":
+            h = C.apply_norm(p["ln_cross"], x, cfg.norm)
+            cross_out, ckv = C.apply_cross_attention_layer(
+                p["cross"], h, cfg,
+                enc_out=enc_out,
+                cross_kv=None if cache is None else (cache["cross_k"], cache["cross_v"]),
+            )
+            x = x + cross_out
+            if mode == "prefill":
+                new_cache["cross_k"], new_cache["cross_v"] = ckv
+            elif mode == "decode":
+                new_cache["cross_k"], new_cache["cross_v"] = cache["cross_k"], cache["cross_v"]
+        h = C.apply_norm(p["ln_mlp"], x, cfg.norm)
+        if fam == "moe":
+            mo, aux = MOE.apply_moe(p["moe"], h, cfg)
+            x = x + mo
+        else:
+            x = x + C.apply_mlp(p["mlp"], h, cfg)
+
+    elif fam == "ssm":
+        h = C.apply_norm(p["ln_ssm"], x, cfg.norm)
+        so, sc = M.apply_ssm_layer(
+            p["ssm"], h, cfg, mode=mode,
+            cache=None if cache is None else cache["ssm"],
+        )
+        if sc is not None:
+            new_cache["ssm"] = sc
+        x = x + so
+
+    elif fam == "hybrid":
+        h = C.apply_norm(p["ln_attn"], x, cfg.norm)
+        attn_out, ac = C.apply_attention_layer(
+            p["attn"], h, cfg, positions=positions, mode=mode,
+            cache=None if cache is None else cache["attn"], kv_chunk=kv_chunk,
+            cache_len=cache_len, seq_positions=seq_positions,
+        )
+        ssm_out, sc = M.apply_ssm_layer(
+            p["ssm"], h, cfg, mode=mode,
+            cache=None if cache is None else cache["ssm"],
+        )
+        if ac is not None:
+            new_cache["attn"] = ac
+        if sc is not None:
+            new_cache["ssm"] = sc
+        mix = 0.5 * (
+            attn_out * p["beta_attn"].astype(x.dtype)
+            + ssm_out * p["beta_ssm"].astype(x.dtype)
+        )
+        x = x + mix
+        h = C.apply_norm(p["ln_mlp"], x, cfg.norm)
+        x = x + C.apply_mlp(p["mlp"], h, cfg)
+
+    else:
+        raise ValueError(fam)
+
+    return x, (new_cache or None), aux
+
+
+def apply_encoder_block(p, x, cfg: ModelConfig, *, kv_chunk=1024):
+    """Bidirectional encoder layer (whisper): full self-attn + MLP."""
+    b, s, _ = x.shape
+    h = C.apply_norm(p["ln_attn"], x, cfg.norm)
+    hh, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (h @ p["attn"]["wq"]).reshape(b, s, hh, dh)
+    k = (h @ p["attn"]["wk"]).reshape(b, s, kv, dh)
+    v = (h @ p["attn"]["wv"]).reshape(b, s, kv, dh)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    out = C.attention(
+        q, k, v, q_positions=pos, kv_positions=pos,
+        causal=False, window=None, kv_chunk=kv_chunk,
+    )
+    x = x + out @ p["attn"]["wo"]
+    h = C.apply_norm(p["ln_mlp"], x, cfg.norm)
+    return x + C.apply_mlp(p["mlp"], h, cfg)
+
+
+def init_block_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype, *, enc_len: int = 0):
+    """Cache pytree for ONE layer (stacked over layers by the caller)."""
+    fam = cfg.family
+    c = {}
+    if fam in ("dense", "vlm", "moe", "encdec", "hybrid"):
+        c["attn"] = C.init_attention_cache(cfg, batch, seq_len, dtype)
+    if fam == "encdec":
+        kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+        c["cross_k"] = jnp.zeros((batch, enc_len, kv, dh), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, kv, dh), dtype)
+    if fam in ("ssm", "hybrid"):
+        c["ssm"] = M.init_ssm_cache(cfg, batch, dtype)
+    return c

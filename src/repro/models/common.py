@@ -1,0 +1,561 @@
+"""Shared model components: norms, RoPE / M-RoPE, GQA attention (chunked
+flash-style with causal / sliding-window masking), MLPs, init helpers.
+
+All modules are plain-function + dict-pytree style (no framework dependency);
+compute is bf16 with fp32 softmax/norm/accumulation.  Logical sharding axes
+are attached per-leaf by ``repro.dist.sharding`` via the ``AXES`` metadata
+returned from each ``init_*`` (leaf name → tuple of logical axis names).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.utils import flags
+
+MASK_VALUE = -1e30
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+def dense_init(key, shape, axes, dtype, scale=None):
+    """Fan-in scaled normal init; returns (array, logical-axes)."""
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype), axes
+
+
+def split(key, n):
+    return jax.random.split(key, n)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_norm(cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    return {"scale": (jnp.ones((dim,), jnp.float32), ("embed",))}
+
+
+def apply_norm(p, x, kind: str):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float, mrope_sections=None):
+    """x: (B, S, H, Dh); positions: (B, S) or (3, B, S) for M-RoPE."""
+    dh = x.shape[-1]
+    inv = rope_frequencies(dh, theta)  # (Dh/2,)
+    if mrope_sections is None:
+        angles = positions[..., None].astype(jnp.float32) * inv  # (B,S,Dh/2)
+    else:
+        # Qwen2-VL M-RoPE: frequency bands split into (t, h, w) sections,
+        # each driven by its own position stream.
+        sec = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(mrope_sections)]
+        )  # (Dh/2,) section selector
+        pos_sel = jnp.take(positions, sec, axis=0)  # (Dh/2, B, S)
+        angles = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32) * inv
+    cos, sin = jnp.cos(angles)[..., None, :], jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, chunked flash-style)
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh), ("embed", "heads_x_dim"), dt),
+        "wk": dense_init(ks[1], (d, kv * dh), ("embed", "kv_x_dim"), dt),
+        "wv": dense_init(ks[2], (d, kv * dh), ("embed", "kv_x_dim"), dt),
+        "wo": dense_init(ks[3], (h * dh, d), ("heads_x_dim", "embed"), dt, scale=(h * dh) ** -0.5),
+    }
+
+
+def _online_softmax_step(carry, s, v_chunk):
+    """One kv-chunk of the online-softmax accumulation.
+
+    s: (B, KV, rep, Sq, Ck) fp32 masked scores; v_chunk: (B, Ck, KV, Dh).
+    """
+    m, l, acc = carry
+    m_new = jnp.maximum(m, s.max(-1))
+    m_new = jnp.maximum(m_new, -1e25)  # guard fully-masked rows
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(-1)
+    pv = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v_chunk.dtype), v_chunk)
+    acc = acc * corr[..., None].astype(acc.dtype) + pv
+    return m_new, l, acc
+
+
+def attention(
+    q, k, v, *, q_positions, kv_positions, causal: bool,
+    window: int | None, kv_chunk: int = 1024, schedule: str = "rect",
+):
+    """Chunked GQA attention with O(Sq·chunk) working set.
+
+    q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh); positions are absolute token
+    indices used for causal and sliding-window masking (position < 0 on the
+    kv side marks an invalid / not-yet-filled cache slot).
+
+    Schedules (EXPERIMENTS.md §Perf):
+      * ``rect`` — baseline: every kv chunk visited for the full q range;
+        masked chunks contribute zero but still cost FLOPs.
+      * ``tri``  — causal full self-attention only: square (q, kv) chunk
+        pairs enumerated lower-triangularly (band-limited under SWA),
+        halving (or better) the attention FLOPs.
+    """
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, dh).transpose(0, 2, 3, 1, 4)  # (B,KV,rep,Sq,Dh)
+    scale = dh**-0.5
+
+    kv_chunk = min(kv_chunk, sk)
+    num_chunks = sk // kv_chunk if sk % kv_chunk == 0 else -(-sk // kv_chunk)
+
+    if schedule == "tri" and causal and sq == sk and num_chunks > 1:
+        out = _attention_tri(
+            qg, k, v, q_positions=q_positions, kv_positions=kv_positions,
+            window=window, chunk=kv_chunk, scale=scale,
+        )
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * dh).astype(q.dtype)
+
+    def masked_scores(k_chunk, kpos_chunk):
+        s = jnp.einsum("bgrqd,bkgd->bgrqk", qg, k_chunk, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = kpos_chunk[None, :] >= 0  # valid slot
+        if causal:
+            mask &= kpos_chunk[None, :] <= q_positions[:, None]
+        if window is not None:
+            mask &= q_positions[:, None] - kpos_chunk[None, :] < window
+        return jnp.where(mask[None, None, None], s, MASK_VALUE)
+
+    if num_chunks == 1:
+        s = masked_scores(k, kv_positions)
+        m = jnp.maximum(s.max(-1), -1e25)
+        p = jnp.exp(s - m[..., None])
+        out = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(v.dtype), v)
+        out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None].astype(out.dtype)
+    else:
+        pad = num_chunks * kv_chunk - sk
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+        kc = k.reshape(b, num_chunks, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+        vc = v.reshape(b, num_chunks, kv_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+        pc = kv_positions.reshape(num_chunks, kv_chunk)
+
+        def body(carry, xs):
+            k_chunk, v_chunk, kpos = xs
+            s = masked_scores(k_chunk, kpos)
+            return _online_softmax_step(carry, s, v_chunk), None
+
+        init = (
+            jnp.full((b, kvh, rep, sq), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kvh, rep, sq), jnp.float32),
+            jnp.zeros((b, kvh, rep, sq, dh), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, (kc, vc, pc), unroll=flags.scan_unroll())
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h * dh).astype(q.dtype)
+
+
+def ebv_attention_sharded(q, k, v, *, q_positions, window, scale=None):
+    """**EbV-scheduled causal self-attention** — the paper's equalization
+    trick applied to sequence-parallel attention (EXPERIMENTS.md §Perf).
+
+    Plain SP causal attention is load-imbalanced: rank r's contiguous
+    q-shard needs (r+1)/P of the kv prefix — rank P−1 does P× rank 0's
+    work, and SPMD uniformity forces everyone to pay the rectangle.  The
+    paper's pairing (work unit r ↔ n−1−r) fixes exactly this: rank r
+    processes q-blocks {r, 2P−1−r}; their causal work sums to
+    ``(r+1) + (2P−r) = 2P+1`` kv-blocks — **constant across ranks** — so
+    the triangular schedule becomes a fixed-shape, perfectly balanced SPMD
+    loop (FLOPs = the causal triangle, ½ the rectangular baseline, zero
+    straggler ranks).
+
+    The fold exchange happens *inside* the island with 8 single-block
+    static ``ppermute``s (O(B·c·H·Dh) each) — no resharding of the
+    seq-sharded operands (the v1 outside-permutation gather replicated q
+    and blew peak memory 5×; §Perf log).
+
+    q: (B, S, H, Dh) seq-shardable; k/v: (B, S, KV, Dh); ``q_positions``
+    must be ``arange(S)`` (train/prefill).  Returns (B, S, H·Dh) in
+    original order.  Requires a ``model`` mesh axis and S % 2P == 0.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding as shlib
+
+    mesh = shlib.active_mesh()
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    p_ = mesh.shape["model"]
+    nb = 2 * p_
+    c = s // nb
+    scale = scale if scale is not None else dh**-0.5
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    while batch_axes:
+        size = 1
+        for a in batch_axes:
+            size *= mesh.shape[a]
+        if b % size == 0:
+            break
+        batch_axes = batch_axes[:-1]
+
+    ax = "model"
+
+    def _exchange(slot0, slot1, pairs_by_slot):
+        """Route local c-blocks by static (src→dst) tables; each table entry
+        also says which slot the source sends.  Returns what this rank
+        receives (zeros if it is not a destination in the table)."""
+        out = None
+        for pairs, slot_sel in pairs_by_slot:
+            if not pairs:
+                continue
+            send = slot0 if slot_sel == 0 else slot1
+            got = jax.lax.ppermute(send, ax, pairs)
+            out = got if out is None else out + got
+        return out
+
+    def local(ql, kl, vl):
+        r = jax.lax.axis_index(ax)
+        bl = ql.shape[0]
+        kf = jax.lax.all_gather(kl, ax, axis=1, tiled=True)  # (Bl, S, KV, Dh)
+        vf = jax.lax.all_gather(vl, ax, axis=1, tiled=True)
+
+        # ---- fold-in: local contiguous blocks (2r, 2r+1) → (r, nb−1−r) ----
+        s0, s1 = ql[:, :c], ql[:, c:]
+        # need block t (t = this rank): owner t//2, slot t%2
+        pA = [(t // 2, t) for t in range(p_) if t % 2 == 0]
+        pB = [(t // 2, t) for t in range(p_) if t % 2 == 1]
+        q_lo = _exchange(s0, s1, [(pA, 0), (pB, 1)])
+        # need block nb−1−t: owner (nb−1−t)//2, slot (nb−1−t)%2
+        pC = [((nb - 1 - t) // 2, t) for t in range(p_) if (nb - 1 - t) % 2 == 0]
+        pD = [((nb - 1 - t) // 2, t) for t in range(p_) if (nb - 1 - t) % 2 == 1]
+        q_hi = _exchange(s0, s1, [(pC, 0), (pD, 1)])
+
+        def to_heads(q_blk_seq):  # (Bl, c, H·Dh-ish) → (Bl, KV, rep, c, Dh)
+            return q_blk_seq.reshape(bl, c, kvh, rep, dh).transpose(0, 2, 3, 1, 4)
+
+        qg_lo, qg_hi = to_heads(q_lo), to_heads(q_hi)
+        m = jnp.full((bl, kvh, rep, 2, c), -jnp.inf, jnp.float32)
+        l = jnp.zeros((bl, kvh, rep, 2, c), jnp.float32)
+        acc = jnp.zeros((bl, kvh, rep, 2, c, dh), jnp.float32)
+        pos_lo = r * c + jnp.arange(c, dtype=jnp.int32)
+        pos_hi = (nb - 1 - r) * c + jnp.arange(c, dtype=jnp.int32)
+
+        def step(carry, j):  # 2P+1 equal steps — every one does real work
+            m, l, acc = carry
+            use_lo = j <= r
+            kv_idx = jnp.where(use_lo, j, j - (r + 1))
+            half = jnp.where(use_lo, 0, 1)
+            q_blk = jnp.where(use_lo, qg_lo, qg_hi)
+            qp = jnp.where(use_lo, pos_lo, pos_hi)
+            k_blk = jax.lax.dynamic_slice_in_dim(kf, kv_idx * c, c, axis=1)
+            v_blk = jax.lax.dynamic_slice_in_dim(vf, kv_idx * c, c, axis=1)
+            kp = kv_idx * c + jnp.arange(c, dtype=jnp.int32)
+            sc = jnp.einsum("bgrqd,bkgd->bgrqk", q_blk, k_blk, preferred_element_type=jnp.float32)
+            sc = sc * scale
+            mask = kp[None, :] <= qp[:, None]
+            if window is not None:
+                mask &= qp[:, None] - kp[None, :] < window
+            sc = jnp.where(mask[None, None, None], sc, MASK_VALUE)
+            m_b = jax.lax.dynamic_index_in_dim(m, half, axis=3, keepdims=False)
+            l_b = jax.lax.dynamic_index_in_dim(l, half, axis=3, keepdims=False)
+            a_b = jax.lax.dynamic_index_in_dim(acc, half, axis=3, keepdims=False)
+            nm, nl, na = _online_softmax_step((m_b, l_b, a_b), sc, v_blk)
+            m = jax.lax.dynamic_update_slice_in_dim(m, nm[:, :, :, None], half, axis=3)
+            l = jax.lax.dynamic_update_slice_in_dim(l, nl[:, :, :, None], half, axis=3)
+            acc = jax.lax.dynamic_update_slice_in_dim(acc, na[:, :, :, None], half, axis=3)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m, l, acc), jnp.arange(nb + 1, dtype=jnp.int32),
+            unroll=flags.scan_unroll(),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (Bl,KV,rep,2,c,Dh)
+        out = out.transpose(0, 3, 4, 1, 2, 5).reshape(bl, 2, c, h * dh).astype(ql.dtype)
+        o_lo, o_hi = out[:, 0], out[:, 1]
+
+        # ---- fold-out: computed blocks (r, nb−1−r) → contiguous (2t, 2t+1)
+        # block 2t: rank 2t slot-lo if 2t<P else rank nb−1−2t slot-hi
+        q1 = [(2 * t, t) for t in range(p_) if 2 * t < p_]
+        q2 = [(nb - 1 - 2 * t, t) for t in range(p_) if 2 * t >= p_]
+        blk_even = _exchange(o_lo, o_hi, [(q1, 0), (q2, 1)])
+        # block 2t+1: rank 2t+1 slot-lo if 2t+1<P else rank nb−2−2t slot-hi
+        q3 = [(2 * t + 1, t) for t in range(p_) if 2 * t + 1 < p_]
+        q4 = [(nb - 2 - 2 * t, t) for t in range(p_) if 2 * t + 1 >= p_]
+        blk_odd = _exchange(o_lo, o_hi, [(q3, 0), (q4, 1)])
+        return jnp.concatenate([blk_even, blk_odd], axis=1)  # (Bl, 2c, H·Dh)
+
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(batch_axes or None, ax, None, None),
+            P(batch_axes or None, ax, None, None),
+            P(batch_axes or None, ax, None, None),
+        ),
+        out_specs=P(batch_axes or None, ax, None),
+        check_vma=False,
+    )
+    return fn(q, k, v)
+
+
+def _attention_tri(qg, k, v, *, q_positions, kv_positions, window, chunk, scale):
+    """Triangular-schedule causal attention (§Perf optimization).
+
+    Enumerates only the (q-chunk, kv-chunk) pairs below the causal diagonal
+    (and inside the SWA band), scanning them in q-major order so the online
+    softmax stays sequential per q chunk.  FLOPs ≈ ½ of the rectangular
+    schedule (less under SWA); working set unchanged.
+    """
+    b, kvh, rep, sq, dh = qg.shape
+    c = chunk
+    n = -(-sq // c)
+    pad = n * c - sq
+    if pad:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-(10**9))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-1)
+
+    pairs = [
+        (qi, ki)
+        for qi in range(n)
+        for ki in range(qi + 1)
+        # band limit under sliding window: newest kv position in chunk ki is
+        # ki*c + c - 1; oldest q position is qi*c — skip fully-expired pairs
+        if window is None or (qi * c) - (ki * c + c - 1) < window
+    ]
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def body(carry, pair):
+        m, l, acc = carry
+        qi, ki = pair
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * c, c, axis=3)
+        k_blk = jax.lax.dynamic_slice_in_dim(k, ki * c, c, axis=1)
+        v_blk = jax.lax.dynamic_slice_in_dim(v, ki * c, c, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(q_positions, qi * c, c)
+        kpos = jax.lax.dynamic_slice_in_dim(kv_positions, ki * c, c)
+        s = jnp.einsum("bgrqd,bkgd->bgrqk", q_blk, k_blk, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = (kpos[None, :] >= 0) & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None, None], s, MASK_VALUE)
+
+        m_blk = jax.lax.dynamic_slice_in_dim(m, qi * c, c, axis=3)
+        l_blk = jax.lax.dynamic_slice_in_dim(l, qi * c, c, axis=3)
+        acc_blk = jax.lax.dynamic_slice_in_dim(acc, qi * c, c, axis=3)
+        new = _online_softmax_step((m_blk, l_blk, acc_blk), s, v_blk)
+        m = jax.lax.dynamic_update_slice_in_dim(m, new[0], qi * c, axis=3)
+        l = jax.lax.dynamic_update_slice_in_dim(l, new[1], qi * c, axis=3)
+        acc = jax.lax.dynamic_update_slice_in_dim(acc, new[2], qi * c, axis=3)
+        return (m, l, acc), None
+
+    init = (
+        jnp.full((b, kvh, rep, n * c), -jnp.inf, jnp.float32),
+        jnp.zeros((b, kvh, rep, n * c), jnp.float32),
+        jnp.zeros((b, kvh, rep, n * c, dh), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (qi_arr, ki_arr), unroll=flags.scan_unroll()
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out[:, :, :, :sq]
+
+
+def apply_attention_layer(
+    p, x, cfg: ModelConfig, *, positions, mode="train", cache=None,
+    cache_len=None, kv_chunk=1024, seq_positions=None,
+):
+    """Full attention sublayer: qkv proj → rope → (cache update) → attention
+    → out proj.  Returns (out, new_cache).
+
+    modes: ``train`` (no cache), ``prefill`` (full-seq attention, returns a
+    freshly built cache of ``cache_len`` slots), ``decode`` (single token
+    against ``cache``).  ``cache``: {"k","v": (B, Sc, KV, Dh), "pos": (Sc,)
+    int32 absolute position per slot, −1 = empty}.  Sliding-window archs use
+    a ring buffer of ``Sc == window`` slots.
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kv, dh)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+
+    # masking / cache-slot positions are SEQUENCE indices; ``positions``
+    # feeds rope only (M-RoPE streams differ from sequence order).
+    tpos = seq_positions if seq_positions is not None else (
+        positions if cfg.mrope_sections is None else positions[0]
+    )
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    if mode in ("train", "prefill"):
+        pos1d = tpos[0] if tpos.ndim > 1 else tpos
+        from repro.dist import sharding as _sh
+
+        mesh = _sh.active_mesh()
+        sched = cfg.attention_schedule
+        if (
+            sched == "ebv" and mesh is not None and "model" in mesh.axis_names
+            and s == k.shape[1] and s % (2 * mesh.shape["model"]) == 0
+        ):
+            out = ebv_attention_sharded(
+                q, k, v, q_positions=pos1d, window=cfg.sliding_window
+            )
+        else:
+            out = attention(
+                q, k, v,
+                q_positions=pos1d, kv_positions=pos1d,
+                causal=True, window=cfg.sliding_window, kv_chunk=kv_chunk,
+                schedule="rect" if sched == "ebv" else sched,
+            )
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _build_cache(cfg, k, v, pos1d, cache_len or s)
+    elif mode == "decode":
+        sc = cache["k"].shape[1]
+        cur = tpos[0, 0] if tpos.ndim > 1 else tpos[0]  # scalar current position
+        slot = cur % sc if cfg.sliding_window is not None else cur
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(cache["pos"], cur[None].astype(jnp.int32), (slot,))
+        out = attention(
+            q, ck, cv,
+            q_positions=jnp.full((s,), cur, jnp.int32),
+            kv_positions=cpos,
+            causal=True, window=cfg.sliding_window, kv_chunk=max(sc, 1),
+        )
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        raise ValueError(mode)
+
+    return out @ p["wo"], new_cache
+
+
+def _build_cache(cfg: ModelConfig, k, v, pos1d, cache_len: int):
+    """Prefill → decode cache layout (ring buffer for sliding window)."""
+    b, s = k.shape[0], k.shape[1]
+    if cfg.sliding_window is not None:
+        w = min(cfg.sliding_window, cache_len)
+        if s >= w:
+            ck, cv = k[:, s - w :], v[:, s - w :]
+            cpos = pos1d[s - w :].astype(jnp.int32)
+            # ring layout: slot = pos % w; with w | s the slice is already
+            # ring-aligned, otherwise roll into place.
+            shift = (s - w) % w
+            ck = jnp.roll(ck, shift, axis=1)
+            cv = jnp.roll(cv, shift, axis=1)
+            cpos = jnp.roll(cpos, shift)
+            return {"k": ck, "v": cv, "pos": cpos}
+        pad = w - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(pos1d.astype(jnp.int32), (0, pad), constant_values=-1)
+        return {"k": ck, "v": cv, "pos": cpos}
+    pad = cache_len - s
+    ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cpos = jnp.pad(pos1d.astype(jnp.int32), (0, pad), constant_values=-1)
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def apply_cross_attention_layer(p, x, cfg: ModelConfig, *, enc_out=None, cross_kv=None):
+    """Encoder-decoder cross attention (no rope, not causal).
+
+    Either ``enc_out`` (B, Se, D) (train/prefill: project K/V here) or
+    ``cross_kv`` = (k, v) precomputed (decode).  Returns (out, (k, v)).
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    if cross_kv is None:
+        se = enc_out.shape[1]
+        k = (enc_out @ p["wk"]).reshape(b, se, kv, dh)
+        v = (enc_out @ p["wv"]).reshape(b, se, kv, dh)
+    else:
+        k, v = cross_kv
+    kvpos = jnp.zeros((k.shape[1],), jnp.int32)
+    out = attention(
+        q, k, v,
+        q_positions=jnp.zeros((s,), jnp.int32), kv_positions=kvpos,
+        causal=False, window=None, kv_chunk=k.shape[1],
+    )
+    return out @ p["wo"], (k, v)
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
+    sc = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, sc, kv, dh), dtype),
+        "v": jnp.zeros((batch, sc, kv, dh), dtype),
+        "pos": jnp.full((sc,), -1, jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 3)
+    p = {"wd": dense_init(ks[2], (f, d), ("ff", "embed"), dt, scale=f**-0.5)}
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(ks[0], (d, f), ("embed", "ff"), dt)
+        p["wu"] = dense_init(ks[1], (d, f), ("embed", "ff"), dt)
+    else:
+        p["wu"] = dense_init(ks[1], (d, f), ("embed", "ff"), dt)
+    return p
+
+
+def _activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_gated:
+        h = _activation(x @ p["wg"], cfg.mlp_activation) * (x @ p["wu"])
+    else:
+        h = _activation(x @ p["wu"], cfg.mlp_activation)
+    return h @ p["wd"]

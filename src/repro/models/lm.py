@@ -1,0 +1,294 @@
+"""Top-level language model: embeddings → stacked blocks (lax.scan) →
+final norm → (chunked) loss / logits.  Covers all 10 assigned architectures
+via the family dispatch in :mod:`repro.models.blocks`.
+
+Entry points (all pure):
+  * ``init_params(key, cfg)``      — arrays-only param pytree (eval_shape-able).
+  * ``param_axes(cfg)``            — matching logical-axes pytree.
+  * ``train_loss(params, batch)``  — scalar CE (+ MoE aux), chunked over
+                                      sequence to avoid a (B,S,V) fp32 tensor.
+  * ``prefill(params, batch)``     — (cache, last-token logits).
+  * ``decode_step(params, cache, tokens, pos)`` — (cache, logits).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain, split_axes, prepend_axis
+from repro.utils import flags
+from . import blocks as B
+from . import common as C
+
+ACT_AXES = ("act_batch", "act_seq", "act_embed")
+
+
+def padded_vocab_size(cfg: ModelConfig) -> int:
+    return -(-cfg.vocab_size // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    vp = padded_vocab_size(cfg)
+    ks = C.split(key, 6)
+    params = {
+        "embed": C.dense_init(ks[0], (vp, cfg.d_model), (), dt, scale=0.02)[0],
+        "ln_f": {"scale": jnp.ones((cfg.d_model,), jnp.float32)},
+        "unembed": C.dense_init(ks[2], (cfg.d_model, vp), (), dt)[0],
+    }
+
+    def one(k):
+        return split_axes(B.init_block(k, cfg))[0]
+
+    params["blocks"] = jax.vmap(one)(jax.random.split(ks[1], cfg.num_layers))
+
+    if cfg.family == "encdec":
+        def one_enc(k):
+            return split_axes(B.init_block(k, cfg, encoder=True))[0]
+
+        params["enc_blocks"] = jax.vmap(one_enc)(jax.random.split(ks[3], cfg.encoder_layers))
+        params["enc_ln_f"] = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    return params
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical axes tree matching :func:`init_params` (derived from the
+    reduced config — same structure, tiny arrays)."""
+    r = cfg.reduced()
+    key = jax.random.PRNGKey(0)
+    ax = {
+        "embed": ("vocab", "embed"),
+        "ln_f": {"scale": ("embed",)},
+        "unembed": ("embed", "vocab"),
+        "blocks": prepend_axis(split_axes(B.init_block(key, r))[1], "layers"),
+    }
+    if cfg.family == "encdec":
+        ax["enc_blocks"] = prepend_axis(split_axes(B.init_block(key, r, encoder=True))[1], "layers")
+        ax["enc_ln_f"] = {"scale": ("embed",)}
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# input embedding per family
+# ---------------------------------------------------------------------------
+def _sinusoid(positions, d):
+    inv = 1.0 / (10000 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = positions[:, None].astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def mrope_positions(cfg: ModelConfig, batch: int, seq: int, *, grid: int = 16):
+    """Qwen2-VL M-RoPE position streams (3, B, S): vision prefix gets a 2-D
+    (h, w) grid at t=0; text advances all three streams together."""
+    p = cfg.num_prefix_embeds
+    idx = np.arange(seq)
+    t = np.where(idx < p, 0, idx - p + grid)
+    h = np.where(idx < p, idx // grid, idx - p + grid)
+    w = np.where(idx < p, idx % grid, idx - p + grid)
+    pos = jnp.asarray(np.stack([t, h, w]), jnp.int32)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig, *, mode):
+    """→ (x, positions, loss_mask, enc_out).  ``batch`` dict per family:
+    lm/ssm/hybrid/moe: {tokens}; vlm: {tokens, prefix_embeds}; encdec:
+    {tokens, frames} (frames = precomputed frame embeddings — frontend stub).
+    """
+    emb = params["embed"]
+    enc_out = None
+    if cfg.family == "vlm":
+        tok_x = jnp.take(emb, batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["prefix_embeds"].astype(tok_x.dtype), tok_x], axis=1)
+        bsz, s = x.shape[0], x.shape[1]
+        positions = mrope_positions(cfg, bsz, s)
+        mask = jnp.concatenate(
+            [jnp.zeros((bsz, cfg.num_prefix_embeds), bool), jnp.ones_like(batch["tokens"], bool)],
+            axis=1,
+        )
+    elif cfg.family == "encdec":
+        frames = batch["frames"]
+        fpos = jnp.arange(frames.shape[1], dtype=jnp.int32)
+        h = frames + _sinusoid(fpos, cfg.d_model)[None].astype(frames.dtype)
+        h = constrain(h, ACT_AXES)
+
+        def enc_body(h, bp):
+            h = B.apply_encoder_block(bp, h, cfg)
+            return constrain(h, ACT_AXES), None
+
+        enc_body = jax.checkpoint(enc_body) if mode == "train" else enc_body
+        h, _ = jax.lax.scan(enc_body, h, params["enc_blocks"], unroll=flags.scan_unroll())
+        enc_out = C.apply_norm(params["enc_ln_f"], h, cfg.norm)
+        x = jnp.take(emb, batch["tokens"], axis=0)
+        tpos = jnp.arange(x.shape[1], dtype=jnp.int32)
+        x = x + _sinusoid(tpos, cfg.d_model)[None].astype(x.dtype)
+        positions = jnp.broadcast_to(tpos[None], x.shape[:2])
+        mask = jnp.ones(x.shape[:2], bool)
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+        bsz, s = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+        mask = jnp.ones((bsz, s), bool)
+    return x, positions, mask, enc_out
+
+
+# ---------------------------------------------------------------------------
+# block stack
+# ---------------------------------------------------------------------------
+def _scan_blocks(params, x, cfg: ModelConfig, *, positions, mode, caches=None,
+                 enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None):
+    def body(x, xs):
+        bp, cache = xs if caches is not None else (xs, None)
+        x, new_cache, aux = B.apply_block(
+            bp, x, cfg, positions=positions, mode=mode, cache=cache,
+            enc_out=enc_out, kv_chunk=kv_chunk, cache_len=cache_len,
+            seq_positions=seq_positions,
+        )
+        x = constrain(x, ACT_AXES)
+        return x, (new_cache, aux)
+
+    if mode == "train":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat_policy == "dots" else None
+        )
+        body_fn = jax.checkpoint(body, policy=policy)
+    else:
+        body_fn = body
+    xs = params["blocks"] if caches is None else (params["blocks"], caches)
+    x, (new_caches, auxs) = jax.lax.scan(body_fn, x, xs, unroll=flags.scan_unroll())
+    return x, new_caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# losses / steps
+# ---------------------------------------------------------------------------
+def _chunked_ce(x, w, labels, mask, *, seq_chunk=512):
+    """Next-token CE without materializing (B, S, V) fp32 logits: scan over
+    sequence chunks, fp32 log-softmax per chunk."""
+    b, s, d = x.shape
+    nc = -(-s // seq_chunk)
+    pad = nc * seq_chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xc = x.reshape(b, nc, seq_chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, seq_chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, seq_chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        xi, li, mi = xs
+        logits = jnp.einsum("bsd,dv->bsv", xi, w, preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        loss = jnp.sum((lse - ll) * mi)
+        return (acc[0] + loss, acc[1] + jnp.sum(mi)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (xc, lc, mc),
+        unroll=flags.scan_unroll(),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, kv_chunk=1024, aux_weight=0.01):
+    x, positions, mask, enc_out = _embed_inputs(params, batch, cfg, mode="train")
+    seq_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x = constrain(x, ACT_AXES)
+    x, _, aux = _scan_blocks(
+        params, x, cfg, positions=positions, mode="train", enc_out=enc_out,
+        kv_chunk=kv_chunk, seq_positions=seq_pos,
+    )
+    x = C.apply_norm(params["ln_f"], x, cfg.norm)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":  # loss only over text positions
+        p = cfg.num_prefix_embeds
+        x = x[:, p:]
+        mask = mask[:, p:]
+    labels = tokens[:, 1:]
+    ce = _chunked_ce(x[:, :-1], params["unembed"], labels, mask[:, 1:].astype(jnp.float32))
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux_weight * aux, metrics
+
+
+def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024):
+    """Full-sequence forward building the decode cache; returns
+    (caches, last-token logits)."""
+    x, positions, _, enc_out = _embed_inputs(params, batch, cfg, mode="prefill")
+    seq_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x = constrain(x, ACT_AXES)
+    seq = x.shape[1]
+    x, caches, _ = _scan_blocks(
+        params, x, cfg, positions=positions, mode="prefill", enc_out=enc_out,
+        kv_chunk=kv_chunk, cache_len=cache_len, seq_positions=seq_pos,
+    )
+    x = C.apply_norm(params["ln_f"], x, cfg.norm)
+    last = x[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", last, params["unembed"], preferred_element_type=jnp.float32)
+    return caches, logits
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (uniform
+    across the batch — continuous batching handles raggedness upstream);
+    caches: per-layer-stacked pytree from :func:`prefill` /
+    :func:`init_caches`.  Returns (new_caches, logits (B, 1, V))."""
+    emb = params["embed"]
+    x = jnp.take(emb, tokens, axis=0)
+    b = x.shape[0]
+    if cfg.family == "encdec":
+        x = x + _sinusoid(pos[None].astype(jnp.int32), cfg.d_model)[None].astype(x.dtype)
+    if cfg.mrope_sections is not None:
+        # same stream law as mrope_positions for text: val = pos − P + grid.
+        # The temporal mask stream (positions[0]) must stay the raw absolute
+        # position, so we offset only for rope and let apply_rope consume it;
+        # t/h/w coincide for text tokens.
+        mpos = pos.astype(jnp.int32) - cfg.num_prefix_embeds + 16
+        positions = jnp.broadcast_to(mpos, (3, b, 1))
+    else:
+        positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
+    seq_pos = jnp.broadcast_to(pos.astype(jnp.int32), (1,))
+    x, new_caches, _ = _scan_blocks(
+        params, x, cfg, positions=positions, mode="decode", caches=caches,
+        seq_positions=seq_pos,
+    )
+    x = C.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32)
+    return new_caches, logits
+
+
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int, *, enc_len: int = 0, dtype=None):
+    """Per-layer-stacked empty cache pytree (for decode-only dry-runs)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = B.init_block_cache(cfg, batch, seq_len, dtype, enc_len=enc_len)
+    return jax.tree.map(lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical sharding axes for the cache pytree (layer-stacked)."""
+    ax_attn = {
+        "k": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+        "v": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
+        "pos": ("layers", None),
+    }
+    ax = {}
+    if cfg.family in ("dense", "vlm", "moe", "encdec", "hybrid"):
+        ax["attn"] = ax_attn
+    if cfg.family == "encdec":
+        ax["cross_k"] = ("layers", "cache_batch", "cache_seq", "cache_kv", None)
+        ax["cross_v"] = ("layers", "cache_batch", "cache_seq", "cache_kv", None)
+    if cfg.family in ("ssm", "hybrid"):
+        ax["ssm"] = {
+            "conv_x": ("layers", "cache_batch", None, "ssm_inner"),
+            "conv_b": ("layers", "cache_batch", None, None),
+            "conv_c": ("layers", "cache_batch", None, None),
+            "state": ("layers", "cache_batch", "state_heads", None, None),
+        }
+    return ax

@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked matmul formulation.
+
+Training/prefill uses the chunkwise-parallel SSD algorithm (intra-chunk
+attention-like matmuls + inter-chunk state scan): MXU-friendly, O(S·Q)
+memory.  Decode is the O(1) recurrent update on the (B, H, hd, N) state.
+Single B/C group (G=1), as in the 1.3B config.
+
+Projections are SPLIT per output segment (z, x, B, C, dt) instead of one
+fused ``in_proj`` (§Perf iteration 0): a fused (D, 2di+2N+H) output dim
+cannot shard cleanly — slicing z/x/B/C out of a model-sharded flat dim
+forces GSPMD reshards every layer.  Split projections give each segment its
+natural sharding (x, z → TP over heads; B, C, dt → replicated, they are
+small).  The math is identical (the conv is depthwise, so per-segment convs
+equal the fused conv).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .common import dense_init, split, apply_norm
+from repro.utils import flags
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    return di, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, n, h, hd, cw = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 9)
+    # dt bias: softplus(dt_bias) log-uniform in [1e-3, 1e-1]
+    u = jax.random.uniform(ks[7], (h,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))
+    conv = lambda k, ch, ax: (jax.random.normal(k, (cw, ch), jnp.float32).astype(dt) * 0.1, (None, ax))
+    return {
+        "z_proj": dense_init(ks[0], (d, di), ("embed", "ssm_inner"), dt),
+        "x_proj": dense_init(ks[1], (d, di), ("embed", "ssm_inner"), dt),
+        "b_proj": dense_init(ks[2], (d, n), ("embed", None), dt),
+        "c_proj": dense_init(ks[3], (d, n), ("embed", None), dt),
+        "dt_proj": dense_init(ks[4], (d, h), ("embed", None), dt),
+        "conv_x": conv(ks[5], di, "ssm_inner"),
+        "conv_b": conv(ks[6], n, None),
+        "conv_c": conv(ks[8], n, None),
+        "a_log": (jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)), ("ssm_heads",)),
+        "d_skip": (jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": (dt_bias, ("ssm_heads",)),
+        "norm_scale": (jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+        "out_proj": dense_init(ks[7], (di, d), ("ssm_inner", "embed"), dt, scale=di**-0.5),
+    }
+
+
+def _gated_norm(p, y, z):
+    return apply_norm({"scale": p["norm_scale"]}, y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), "rmsnorm")
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv along S: xbc (B, S, C), w (cw, C)."""
+    cw = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(cw))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x, dt, a, bmat, cmat, *, chunk: int):
+    """Chunkwise-parallel SSD.
+
+    x: (B, S, H, P); dt, a: (B, S, H) (a = dt·A, negative); bmat/cmat: (B, S, N).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    s_pad = -(-s // q) * q
+    if s_pad != s:
+        # zero padding is exact: a=0 ⇒ decay exp(0)=1 (state preserved), B·x=0
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, s_pad - s), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, s_pad - s), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, s_pad - s), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, s_pad - s), (0, 0)))
+    c = s_pad // q
+    xc = (x * dt[..., None]).reshape(b, c, q, h, p)
+    ac = a.reshape(b, c, q, h)
+    bc = bmat.reshape(b, c, q, n)
+    cc = cmat.reshape(b, c, q, n)
+
+    acum = jnp.cumsum(ac, axis=2)  # (B,C,Q,H) within-chunk cumulative log-decay
+    asum = acum[:, :, -1]  # (B,C,H)
+
+    # ---- intra-chunk (masked decay-weighted "attention") ----
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc, preferred_element_type=jnp.float32)
+    ldecay = acum[:, :, :, None, :] - acum[:, :, None, :, :]  # (B,C,Q,K,H)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(tri[None, None, :, :, None], jnp.exp(ldecay), 0.0)
+    att = cb[..., None] * lmat  # (B,C,Q,K,H)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", att.astype(x.dtype), xc)
+
+    # ---- chunk states and inter-chunk scan ----
+    decay_to_end = jnp.exp(asum[:, :, None, :] - acum)  # (B,C,Q,H)
+    states = jnp.einsum(
+        "bckn,bckh,bckhp->bchpn", bc.astype(jnp.float32), decay_to_end, xc.astype(jnp.float32)
+    )  # (B,C,H,P,N)
+
+    def scan_body(hprev, xs):
+        st, asum_c = xs  # (B,H,P,N), (B,H)
+        hnew = hprev * jnp.exp(asum_c)[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfinal, hprevs = jax.lax.scan(
+        scan_body, h0, (states.transpose(1, 0, 2, 3, 4), asum.transpose(1, 0, 2)),
+        unroll=flags.scan_unroll(),
+    )
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)  # (B,C,H,P,N) state entering each chunk
+
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", cc.astype(jnp.float32), hprevs)
+    y_inter = y_inter * jnp.exp(acum)[..., None]
+    y = y_intra + y_inter.astype(x.dtype)
+    return y.reshape(b, s_pad, h, p)[:, :s], hfinal
+
+
+def apply_ssm_layer(p, xin, cfg: ModelConfig, *, mode="train", cache=None):
+    """Mamba-2 mixer sublayer.  cache: {"conv_x","conv_b","conv_c": raw
+    pre-conv tails, "state": (B, H, P, N)} for decode; ``prefill`` returns a
+    freshly built cache, ``train`` returns cache=None."""
+    b, s, _ = xin.shape
+    di, n, h, hd, cw = _dims(cfg)
+    z = xin @ p["z_proj"]
+    xr = xin @ p["x_proj"]
+    br = xin @ p["b_proj"]
+    cr = xin @ p["c_proj"]
+    dtr = xin @ p["dt_proj"]
+    a_neg = -jnp.exp(p["a_log"])  # (H,)
+
+    if mode in ("train", "prefill"):
+        x = _causal_conv(xr, p["conv_x"]).reshape(b, s, h, hd)
+        bmat = _causal_conv(br, p["conv_b"])
+        cmat = _causal_conv(cr, p["conv_c"])
+        dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+        a = dt * a_neg
+        y, hfinal = ssd_chunked(x, dt.astype(xin.dtype), a, bmat, cmat, chunk=cfg.ssm_chunk)
+        y = y + x * p["d_skip"][:, None].astype(x.dtype)
+        y = y.reshape(b, s, di)
+        new_cache = None
+        if mode == "prefill":
+            def tail(r):
+                if s >= cw - 1:
+                    return r[:, s - (cw - 1) :, :]
+                return jnp.pad(r, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+
+            new_cache = {"conv_x": tail(xr), "conv_b": tail(br), "conv_c": tail(cr),
+                         "state": hfinal}
+    else:
+        # decode: conv via cached window, then O(1) recurrent state update
+        def conv_step(r_new, cache_seg, w):
+            window = jnp.concatenate([cache_seg, r_new], axis=1)  # (B, cw, C)
+            out = jnp.einsum("bwc,wc->bc", window, w)
+            return jax.nn.silu(out.astype(jnp.float32)).astype(r_new.dtype), window[:, 1:]
+
+        xo, ncx = conv_step(xr, cache["conv_x"], p["conv_x"])
+        bo, ncb = conv_step(br, cache["conv_b"], p["conv_b"])
+        co, ncc = conv_step(cr, cache["conv_c"], p["conv_c"])
+        state = cache["state"]
+        x = xo.reshape(b, 1, h, hd)
+        dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,1,H)
+        da = jnp.exp(dt * a_neg)  # (B,1,H)
+        xdt = (x * dt[..., None].astype(x.dtype))[:, 0]  # (B,H,P)
+        state = state * da[:, 0, :, None, None] + jnp.einsum(
+            "bn,bhp->bhpn", bo.astype(jnp.float32), xdt.astype(jnp.float32)
+        )
+        y = jnp.einsum("bn,bhpn->bhp", co.astype(jnp.float32), state)
+        y = y.astype(xin.dtype) + x[:, 0] * p["d_skip"][:, None].astype(x.dtype)
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv_x": ncx, "conv_b": ncb, "conv_c": ncc, "state": state}
+
+    y = _gated_norm(p, y, z)
+    return y @ p["out_proj"], new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, n, h, hd, cw = _dims(cfg)
+    return {
+        "conv_x": jnp.zeros((batch, cw - 1, di), dtype),
+        "conv_b": jnp.zeros((batch, cw - 1, n), dtype),
+        "conv_c": jnp.zeros((batch, cw - 1, n), dtype),
+        "state": jnp.zeros((batch, h, hd, n), jnp.float32),
+    }

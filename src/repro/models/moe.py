@@ -1,0 +1,176 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-bounded dispatch.
+
+Dispatch is the sort-free slot-assignment scheme (rank-within-expert via a
+cumsum over the one-hot routing matrix, scatter-add into an (E·cap, D)
+buffer, gather back) — O(T·E) intermediates, no (T, E, cap) one-hot tensor.
+
+Distribution (DESIGN.md §5): the layer is an explicit ``shard_map`` island —
+GSPMD cannot shard the (B,S,D)→(T,D) token merge across two mesh axes, so
+we take manual control of the comms:
+
+  * enter: activations all-gathered from SP (seq sharded over ``model``)
+    into full-sequence local blocks (Megatron-SP entry);
+  * dispatch: purely local, per-shard capacity ``cf·T_local·k/E``;
+  * experts: TP — every chip holds a d_ff slice of all experts, so routing
+    never crosses chips (the EP all-to-all alternative is a §Perf
+    comparison point);
+  * exit: psum_scatter over ``model`` returns to the SP layout (one
+    reduce-scatter, completing the Megatron-SP pair).
+
+Without a mesh (smoke tests) the same local function runs unwrapped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as sh
+from .common import dense_init, split, _activation
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), ("embed", "expert"), jnp.float32),
+        "wd": dense_init(ks[3], (e, f, d), ("expert", "ff", "embed"), dt, scale=f**-0.5),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = dense_init(ks[1], (e, d, f), ("expert", "embed", "ff"), dt, scale=d**-0.5)
+        p["wu"] = dense_init(ks[2], (e, d, f), ("expert", "embed", "ff"), dt, scale=d**-0.5)
+    else:
+        p["wu"] = dense_init(ks[2], (e, d, f), ("expert", "embed", "ff"), dt, scale=d**-0.5)
+    return p
+
+
+def _moe_grouped(p, xt, cfg: ModelConfig, *, group_tokens: int = 16384):
+    """Token-grouped dispatch: scan :func:`_moe_local` over token groups so
+    the (E·cap, D) slot buffer stays O(group) instead of O(T) — top-8 × cf
+    1.25 otherwise allocates 10× the token activation (granite train_4k
+    peaked at 31 GiB before grouping; EXPERIMENTS.md §Perf).  Capacity is
+    per group (finer-grained drops — standard 'token groups' semantics)."""
+    t, d = xt.shape
+    if t <= group_tokens:
+        return _moe_local(p, xt, cfg)
+    g = -(-t // group_tokens)
+    pad = g * group_tokens - t
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(g, group_tokens, d)
+
+    def body(_, xb):
+        out, aux = _moe_local(p, xb, cfg)
+        return None, (out, aux)
+
+    from repro.utils import flags
+
+    _, (out, aux) = jax.lax.scan(body, None, xg, unroll=flags.scan_unroll())
+    out = out.reshape(g * group_tokens, d)[:t]
+    return out, aux.mean()
+
+
+def _moe_local(p, xt, cfg: ModelConfig):
+    """Local-token MoE: xt (T, D) → (out (T, D) [partial over the ff shard],
+    aux).  Dispatch/combine never leave the chip."""
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+
+    # bf16 inputs, fp32 accumulation — never materializes an f32 token copy
+    gate_logits = jnp.einsum(
+        "td,de->te", xt, p["router"].astype(xt.dtype),
+        preferred_element_type=jnp.float32,
+    )  # (T, E)
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * Σ_e fraction_e · mean-prob_e
+    frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(frac * probs.mean(0))
+
+    cap = max(int(cfg.moe_capacity_factor * t * k / e), 1)
+
+    buf = jnp.zeros((e * cap, d), xt.dtype)
+    slots = []
+    prev_counts = jnp.zeros((e,), jnp.int32)
+    for j in range(k):
+        ej = top_e[:, j]  # (T,)
+        onehot = jax.nn.one_hot(ej, e, dtype=jnp.int32)  # (T, E)
+        rank = jnp.cumsum(onehot, axis=0) - onehot + prev_counts[None, :]
+        rank_j = jnp.take_along_axis(rank, ej[:, None], axis=1)[:, 0]  # (T,)
+        prev_counts = prev_counts + onehot.sum(0)
+        valid = rank_j < cap
+        slot = jnp.where(valid, ej * cap + rank_j, e * cap - 1)  # overflow dropped
+        slots.append((slot, valid))
+        buf = buf.at[slot].add(jnp.where(valid[:, None], xt, 0.0))
+
+    eb = buf.reshape(e, cap, d)
+    if cfg.mlp_gated:
+        h = _activation(
+            jnp.einsum("ecd,edf->ecf", eb, p["wg"]), cfg.mlp_activation
+        ) * jnp.einsum("ecd,edf->ecf", eb, p["wu"])
+    else:
+        h = _activation(jnp.einsum("ecd,edf->ecf", eb, p["wu"]), cfg.mlp_activation)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(e * cap, d)
+
+    out = jnp.zeros_like(xt)
+    for j, (slot, valid) in enumerate(slots):
+        gathered = out_buf[slot]
+        w = (top_p[:, j] * valid).astype(xt.dtype)
+        out = out + gathered * w[:, None]
+    return out, aux
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: (B, S, D) → (B, S, D) + aux loss.  shard_map island on a mesh."""
+    b, s, d = x.shape
+    mesh = sh.active_mesh()
+    if mesh is None:
+        out, aux = _moe_grouped(p, x.reshape(b * s, d), cfg)
+        return out.reshape(b, s, d), aux
+
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    # shard batch only over the axis prefix that divides it (decode B=1 etc.)
+    while batch_axes:
+        size = 1
+        for a in batch_axes:
+            size *= mesh.shape[a]
+        if b % size == 0:
+            break
+        batch_axes = batch_axes[:-1]
+    tp = "model" in mesh.axis_names and s % mesh.shape["model"] == 0
+    x_spec = P(batch_axes, "model" if tp else None, None)
+    w_ff = P(None, None, "model") if tp else P(None, None, None)
+    w_fd = P(None, "model", None) if tp else P(None, None, None)
+
+    def local_fn(x, router, wu, wd, wg):
+        if tp:
+            x = jax.lax.all_gather(x, "model", axis=1, tiled=True)  # SP → full seq
+        bl, sl, _ = x.shape
+        pl = {"router": router, "wu": wu, "wd": wd}
+        if cfg.mlp_gated:
+            pl["wg"] = wg
+        out, aux = _moe_grouped(pl, x.reshape(bl * sl, d), cfg)
+        out = out.reshape(bl, sl, d)
+        if tp:
+            # partial over the ff shard + return to SP layout: one fused
+            # reduce-scatter over `model` along the sequence dim.
+            out = jax.lax.psum_scatter(out, "model", scatter_dimension=1, tiled=True)
+            aux = jax.lax.pmean(aux, "model")
+        if batch_axes:
+            aux = jax.lax.pmean(aux, batch_axes)
+        return out, aux
+
+    fn = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_ff, w_fd, w_ff),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )
+    # ungated configs pass wu as a (DCE'd) stand-in for wg
+    out, aux = fn(x, p["router"], p["wu"], p["wd"], p.get("wg", p["wu"]))
+    return out, aux

@@ -1,0 +1,2 @@
+"""Batched serving engine (prefill + KV-cache decode)."""
+from .engine import Engine  # noqa: F401

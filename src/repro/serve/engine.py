@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + decode with KV caches.
+
+Static batching with uniform positions (continuous batching raggedness is
+handled upstream by padding into the fixed request grid — the per-slot mask
+lives in the cache ``pos`` arrays).  Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512, jit_kwargs: dict | None = None):
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        kw = jit_kwargs or {}
+
+        def _prefill(params, batch):
+            return lm.prefill(params, batch, cfg, cache_len=max_len)
+
+        def _decode(params, caches, tokens, pos):
+            return lm.decode_step(params, caches, tokens, pos, cfg)
+
+        self._prefill = jax.jit(_prefill, **kw)
+        self._decode = jax.jit(_decode, donate_argnums=(1,), **kw)
+
+    def _model_batch(self, tokens):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if cfg.family == "vlm":
+            key = jax.random.PRNGKey(0)
+            prefix = jax.random.normal(key, (b, cfg.num_prefix_embeds, cfg.d_model), jnp.float32)
+            return {"tokens": jnp.asarray(tokens), "prefix_embeds": prefix.astype(jnp.dtype(cfg.dtype))}
+        if cfg.family == "encdec":
+            key = jax.random.PRNGKey(0)
+            frames = jax.random.normal(key, (b, max(s // 4, 1), cfg.d_model), jnp.float32)
+            return {"tokens": jnp.asarray(tokens), "frames": frames.astype(jnp.dtype(cfg.dtype))}
+        return {"tokens": jnp.asarray(tokens)}
+
+    def generate(
+        self, prompts: np.ndarray, *, max_new_tokens: int = 32,
+        temperature: float = 0.0, seed: int = 0,
+    ) -> np.ndarray:
+        """prompts: (B, S0) int32 → (B, S0 + max_new_tokens) int32."""
+        prompts = np.asarray(prompts, np.int32)
+        b, s0 = prompts.shape
+        prompt_offset = self.cfg.num_prefix_embeds if self.cfg.family == "vlm" else 0
+        assert s0 + prompt_offset + max_new_tokens <= self.max_len, "max_len too small"
+        caches, logits = self._prefill(self.params, self._model_batch(prompts))
+        key = jax.random.PRNGKey(seed)
+        out = [prompts]
+        tok = self._sample(logits[:, -1], temperature, key)
+        pos = s0 + prompt_offset
+        for i in range(max_new_tokens - 1):
+            out.append(np.asarray(tok))
+            caches, logits = self._decode(self.params, caches, tok, jnp.asarray(pos + i, jnp.int32))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits[:, -1], temperature, sub)
+        out.append(np.asarray(tok))
+        return np.concatenate(out, axis=1)
+
+    def _sample(self, logits, temperature, key):
+        logits = logits[:, : self.cfg.vocab_size]  # drop padded vocab tail
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]

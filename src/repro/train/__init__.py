@@ -1,0 +1,2 @@
+"""Training substrate: optimizers (incl. EbV-preconditioned), loop, grad compression."""
+from . import optimizer, loop, grad_compress  # noqa: F401

@@ -1,0 +1,87 @@
+"""Gradient compression for cross-pod data parallelism: int8 quantization
+with error feedback, applied to the pod-axis all-reduce via ``shard_map``.
+
+Inside a pod the DP reduction stays full-precision (GSPMD reduce-scatter,
+ICI is fast); *between* pods (DCI — the slow link at 1000+-node scale) the
+summand is quantized to int8 with a per-leaf fp32 scale, psum'd, and
+dequantized; the quantization residual is carried to the next step
+(error feedback), which keeps SGD-style convergence guarantees.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def quantize(x, *, bits: int = 8):
+    """Symmetric per-tensor int8 quantization; returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    maxv = jnp.max(jnp.abs(x32))
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(maxv, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x32 / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, error):
+    """(grads + error) → (quantized tree, scales, new error)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        q, s = quantize(target)
+        deq = dequantize(q, s)
+        return q, s, target - deq
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    qs = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    new_e = treedef.unflatten([o[2] for o in out])
+    return qs, scales, new_e
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(grads, error, *, mesh, axis: str = "pod"):
+    """Cross-``axis`` mean of ``grads`` with int8 + error-feedback transport.
+
+    grads leaves must be replicated across ``axis`` *within* each shard
+    group already (i.e. call this after the intra-pod reduction).  Returns
+    (reduced grads fp32, new error tree).
+    """
+    n = mesh.shape[axis]
+
+    def local_fn(g, e):
+        q, s, new_e = compress_with_feedback(g, e)
+        # wire payload per pod: int8 q + one fp32 scale.  Each pod's scale
+        # differs, so the exact reduction is the per-pod-scale weighted sum
+        # of the gathered int8 payloads.
+        gathered_scales = jax.tree.map(lambda ss: jax.lax.all_gather(ss, axis), s)
+        gathered_q = jax.tree.map(lambda qq: jax.lax.all_gather(qq, axis), q)
+        red = jax.tree.map(
+            lambda qs, ss: jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0])) / n,
+            gathered_q, gathered_scales,
+        )
+        return red, new_e
+
+    fn = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), P()), out_specs=(P(), P()),
+        check_vma=False,
+    )
+    return fn(grads, error)
+
+
+def compression_ratio(params) -> float:
+    """Wire-bytes ratio of int8+scale vs fp32 transport."""
+    total = sum(p.size for p in jax.tree.leaves(params))
+    return (total * 1 + 4 * len(jax.tree.leaves(params))) / (total * 4)

@@ -1,0 +1,190 @@
+"""Training loop: jit'd train step (grad accumulation, optimizer update),
+fault-tolerant checkpoint/resume, straggler detection, throughput logging.
+
+Works identically on 1 CPU device (smoke/example scale) and on the
+production mesh (launch/train.py attaches shardings).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.data.pipeline import TokenPipeline
+from repro.ckpt.manager import CheckpointManager
+from . import optimizer as opt_lib
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    seq_len: int = 256
+    global_batch: int = 8
+    microbatches: int = 1
+    learning_rate: float = 3e-4
+    warmup_steps: int = 20
+    optimizer: str = "adamw"  # adamw | ebv
+    max_grad_norm: float = 1.0
+    seed: int = 0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    straggler_factor: float = 3.0  # step slower than EMA×this → flagged
+
+
+def make_batch_fn(model_cfg: ModelConfig, train_cfg: TrainConfig):
+    """Turn pipeline token batches into the model's input dict (stub
+    frontends included — frames/patch embeddings are deterministic)."""
+    def fn(tokens):
+        tokens = jnp.asarray(tokens)
+        if model_cfg.family == "vlm":
+            p = model_cfg.num_prefix_embeds
+            rng = jax.random.PRNGKey(train_cfg.seed)
+            prefix = jax.random.normal(
+                rng, (tokens.shape[0], p, model_cfg.d_model), jnp.float32
+            ).astype(jnp.dtype(model_cfg.dtype))
+            return {"tokens": tokens[:, : tokens.shape[1] - p], "prefix_embeds": prefix}
+        if model_cfg.family == "encdec":
+            rng = jax.random.PRNGKey(train_cfg.seed)
+            frames = jax.random.normal(
+                rng, (tokens.shape[0], max(tokens.shape[1] // 4, 1), model_cfg.d_model), jnp.float32
+            ).astype(jnp.dtype(model_cfg.dtype))
+            return {"tokens": tokens, "frames": frames}
+        return {"tokens": tokens}
+
+    return fn
+
+
+def make_train_step(model_cfg: ModelConfig, optimizer: opt_lib.Optimizer, *, microbatches: int = 1):
+    """Returns step(params, opt_state, batch) → (params, opt_state, metrics).
+    With ``microbatches > 1`` gradients are accumulated via lax.scan
+    (sequential microbatches, constant memory).
+
+    The f32 accumulator carry is sharding-constrained to the parameter
+    layout (EXPERIMENTS.md §Perf iteration 1): an unconstrained scan carry
+    is replicated by GSPMD, which turns every per-microbatch gradient into
+    an f32 all-gather and the reductions into full all-reduces."""
+    from repro.dist.sharding import active_mesh, constrain
+
+    param_axes_tree = lm.param_axes(model_cfg)
+
+    def _constrain_like_params(tree):
+        if active_mesh() is None:
+            return tree
+        flat, td = jax.tree.flatten(tree)
+        flat_ax = td.flatten_up_to(param_axes_tree)
+        return td.unflatten([constrain(g, ax) for g, ax in zip(flat, flat_ax)])
+
+    def loss_fn(params, batch):
+        return lm.train_loss(params, batch, model_cfg)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = _constrain_like_params(grads)
+        else:
+            def split_mb(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split_mb, batch)
+
+            def acc_body(acc, mbatch):
+                (l, m), g = grad_fn(params, mbatch)
+                # constrain g itself: sharding then propagates INTO the
+                # backward (partial-sum psums lower as reduce-scatters
+                # instead of replicating all-reduces)
+                g = _constrain_like_params(g)
+                acc_g, acc_l = acc
+                new_g = _constrain_like_params(jax.tree.map(jnp.add, acc_g, g))
+                return (new_g, acc_l + l), m
+
+            zero_g = _constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            )
+            (grads, loss_sum), metrics = jax.lax.scan(acc_body, (zero_g, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: (g / microbatches).astype(g.dtype), grads)
+            loss = loss_sum / microbatches
+            metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        out = {"loss": loss, "gnorm": opt_state.pop("gnorm", jnp.zeros(()))}
+        if isinstance(metrics, dict):
+            out.update(metrics)
+        return params, opt_state, out
+
+    return step
+
+
+def train(
+    model_cfg: ModelConfig,
+    train_cfg: TrainConfig,
+    *,
+    params=None,
+    jit_kwargs: dict | None = None,
+    on_metrics=None,
+):
+    """End-to-end driver.  Returns (params, history)."""
+    key = jax.random.PRNGKey(train_cfg.seed)
+    schedule = opt_lib.warmup_cosine(
+        train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.steps
+    )
+    optimizer = opt_lib.get_optimizer(
+        train_cfg.optimizer, schedule, max_grad_norm=train_cfg.max_grad_norm
+    )
+    if params is None:
+        params = lm.init_params(key, model_cfg)
+    opt_state = optimizer.init(params)
+
+    pipe = TokenPipeline(
+        vocab_size=model_cfg.vocab_size,
+        seq_len=train_cfg.seq_len,
+        global_batch=train_cfg.global_batch,
+        seed=train_cfg.seed,
+    )
+    mgr = CheckpointManager(train_cfg.ckpt_dir) if train_cfg.ckpt_dir else None
+    start_step = 0
+    if mgr and mgr.latest_step() is not None:
+        (params, opt_state), extra, start_step = mgr.restore((params, opt_state))
+        pipe.restore(extra["data"])
+        print(f"[train] resumed from step {start_step}")
+    pipe.step = max(pipe.step, start_step)
+
+    batch_fn = make_batch_fn(model_cfg, train_cfg)
+    step_fn = jax.jit(
+        make_train_step(model_cfg, optimizer, microbatches=train_cfg.microbatches),
+        donate_argnums=(0, 1),
+        **(jit_kwargs or {}),
+    )
+
+    history = []
+    ema = None
+    for step in range(start_step, train_cfg.steps):
+        raw = next(pipe)
+        batch = batch_fn(raw["tokens"])
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        # straggler mitigation hook: synchronous SPMD means a slow host shows
+        # up as a slow step; flag it for the launcher's restart policy.
+        if ema is not None and dt > train_cfg.straggler_factor * ema and step > start_step + 2:
+            print(f"[train][straggler] step {step} took {dt:.3f}s (ema {ema:.3f}s)")
+        ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+        history.append({"step": step, "time_s": dt, **metrics})
+        if on_metrics:
+            on_metrics(history[-1])
+        if step % train_cfg.log_every == 0:
+            tok_s = train_cfg.global_batch * train_cfg.seq_len / dt
+            print(f"[train] step {step:5d} loss {metrics['loss']:.4f} {dt*1e3:7.1f} ms/step {tok_s:,.0f} tok/s")
+        if mgr and (step + 1) % train_cfg.ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state), extra={"data": pipe.state()}, blocking=False)
+    if mgr:
+        mgr.save(train_cfg.steps, (params, opt_state), extra={"data": pipe.state()})
+        mgr.wait()
+    return params, history

@@ -1,0 +1,206 @@
+"""Optimizers, built from scratch (no optax): AdamW, gradient clipping,
+LR schedules, and the paper-technique integration — an EbV-preconditioned
+second-order optimizer whose inverse application is a batched EbV LU solve
+(DESIGN.md §3): for every 2-D parameter factor we maintain a Kronecker-factor
+covariance ``C = β₂C + (1−β₂) G Gᵀ`` and precondition with the solution of
+``(C/τ + λI) P = G`` — the linear system the paper's solver was built for,
+instead of the usual inverse-p-th-root eigendecomposition.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int, floor: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        frac = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+# ---------------------------------------------------------------------------
+# global-norm clipping
+# ---------------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(
+    schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float | None = 1.0,
+    state_dtype=None,
+) -> Optimizer:
+    """AdamW with decoupled weight decay and optional global-norm clipping.
+    ``state_dtype`` lets the biggest configs keep m/v in bf16 (memory table
+    in EXPERIMENTS.md §Dry-run)."""
+
+    def init(params):
+        def zeros_like(p):
+            dt = state_dtype or (p.dtype if jnp.issubdtype(p.dtype, jnp.floating) else jnp.float32)
+            return jnp.zeros(p.shape, dt)
+
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(zeros_like, params),
+            "nu": jax.tree.map(zeros_like, params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = schedule(step)
+
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g32 = g.astype(jnp.float32)
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g32
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            step_dir = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + eps)
+            if weight_decay and p.ndim >= 2:  # no decay on norms/scalars
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * step_dir
+            return newp.astype(p.dtype), mu32.astype(mu.dtype), nu32.astype(nu.dtype)
+
+        out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+        newp = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return newp, {"step": step, "mu": mu, "nu": nu, "gnorm": gnorm}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# EbV-preconditioned optimizer (the paper's solver inside the optimizer)
+# ---------------------------------------------------------------------------
+def ebv_preconditioned(
+    schedule,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    max_grad_norm: float | None = 1.0,
+    damping: float = 1e-3,
+    max_precond_dim: int = 1024,
+    update_every: int = 1,
+    solver_block: int = 128,
+) -> Optimizer:
+    """Second-order preconditioning via EbV LU solves.
+
+    Eligible leaves: 2-D with min(shape) ≤ ``max_precond_dim`` — the
+    covariance is built on the smaller dim.  Ineligible leaves fall back to
+    AdamW.  The preconditioned direction is norm-grafted onto the Adam
+    magnitude, which makes it a drop-in swap.
+    """
+    from repro.core.blocked import blocked_lu
+    from repro.core.solve import lu_solve
+
+    adam = adamw(
+        schedule, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+        max_grad_norm=None, state_dtype=jnp.float32,
+    )
+
+    def eligible(p):
+        return p.ndim == 2 and min(p.shape) <= max_precond_dim
+
+    def init(params):
+        st = adam.init(params)
+        st["cov"] = jax.tree.map(
+            lambda p: jnp.zeros((min(p.shape), min(p.shape)), jnp.float32)
+            if eligible(p)
+            else jnp.zeros((0, 0), jnp.float32),
+            params,
+        )
+        return st
+
+    def update(grads, state, params):
+        if max_grad_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        else:
+            gnorm = global_norm(grads)
+
+        step = state["step"] + 1
+
+        def precondition(g, cov, p):
+            if not eligible(p):
+                return g, cov
+            g32 = g.astype(jnp.float32)
+            left = p.shape[0] <= p.shape[1]
+            gg = g32 @ g32.T if left else g32.T @ g32
+            cov = b2 * cov + (1 - b2) * gg
+            n = cov.shape[0]
+            tr = jnp.trace(cov) / n
+            a = cov / jnp.maximum(tr, 1e-12) + damping * jnp.eye(n, dtype=jnp.float32)
+            # the paper's solver: blocked EbV LU + two-phase substitution
+            lu = blocked_lu(a, block=min(solver_block, n))
+            pre = lu_solve(lu, g32) if left else lu_solve(lu, g32.T).T
+            # norm grafting: keep Adam-scale magnitude
+            pre = pre * (jnp.linalg.norm(g32) / jnp.maximum(jnp.linalg.norm(pre), 1e-12))
+            return pre.astype(g.dtype), cov
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_c = treedef.flatten_up_to(state["cov"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [precondition(g, c, p) for g, c, p in zip(flat_g, flat_c, flat_p)]
+        pre_g = treedef.unflatten([o[0] for o in out])
+        cov = treedef.unflatten([o[1] for o in out])
+
+        adam_state = {k: state[k] for k in ("step", "mu", "nu")}
+        newp, new_adam = adam.update(pre_g, adam_state, params)
+        new_adam["cov"] = cov
+        new_adam["gnorm"] = gnorm
+        new_adam["step"] = step
+        return newp, new_adam
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(name: str, schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "ebv":
+        return ebv_preconditioned(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,34 @@
+"""Process-local analysis flags.
+
+``analysis_unroll()``: during roofline analysis the dry-run lowers reduced-
+depth variants with every ``lax.scan`` fully unrolled, so XLA's static
+``cost_analysis`` (which counts while bodies once) becomes exact; totals for
+the real depth are recovered by linear two-point extrapolation
+(EXPERIMENTS.md §Roofline).  Production lowering keeps rolled loops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+
+class _Flags(threading.local):
+    unroll_scans: bool = False
+
+
+_FLAGS = _Flags()
+
+
+def scan_unroll():
+    """Value for lax.scan's ``unroll=``."""
+    return True if _FLAGS.unroll_scans else 1
+
+
+@contextlib.contextmanager
+def analysis_unroll(on: bool = True):
+    prev = _FLAGS.unroll_scans
+    _FLAGS.unroll_scans = on
+    try:
+        yield
+    finally:
+        _FLAGS.unroll_scans = prev

@@ -1,0 +1,26 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the 512-device XLA flag is only
+# ever set inside launch/dryrun.py or in subprocesses spawned by
+# test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_tree_finite(tree):
+    for leaf in jax.tree.leaves(tree):
+        assert np.all(np.isfinite(np.asarray(leaf, dtype=np.float64)))

@@ -1,0 +1,107 @@
+"""Unit tests for the analysis machinery itself: HLO collective parser,
+per-arch sharding-rule resolution, batched-LU kernel, reports helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.utils.hlo import collective_bytes, computation_multipliers
+
+
+SYNTH_HLO = """HloModule jit_step
+
+%body (p: (s32[], f32[16,64])) -> (s32[], f32[16,64]) {
+  %ag = f32[16,64]{1,0} all-gather(%x), channel_id=1, replica_groups=[4,4]<=[16], dimensions={0}
+  %ar = f32[16,64]{1,0} all-reduce(%ag), channel_id=2, replica_groups=[2,8]<=[16], to_apply=%add
+}
+
+%cond (p: (s32[], f32[16,64])) -> pred[] {
+  %lt = pred[] compare(%a, %b), direction=LT
+}
+
+ENTRY %main (a: f32[16,64]) -> f32[16,64] {
+  %w = (s32[], f32[16,64]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %rs = f32[4,64]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[4,4]<=[16], dimensions={0}
+}
+"""
+
+
+def test_collective_parser_weighted():
+    """While-body collectives multiply by known_trip_count; byte math per op
+    kind matches the documented model."""
+    out = collective_bytes(SYNTH_HLO, num_devices=16, weighted=True)
+    b = 16 * 64 * 4  # f32[16,64]
+    # all-gather in body: operand = result/g (g=4), ×10 trips
+    assert out["operand_bytes"]["all-gather"] == (b // 4) * 10
+    assert out["wire_bytes"]["all-gather"] == int(b * 3 / 4) * 10
+    # all-reduce in body: operand = result, wire = 2·(g−1)/g·result (g=8)
+    assert out["operand_bytes"]["all-reduce"] == b * 10
+    assert out["wire_bytes"]["all-reduce"] == round(2 * b * 7 / 8 * 10)
+    # reduce-scatter in entry (×1): operand = result·g
+    rs = 4 * 64 * 4
+    assert out["operand_bytes"]["reduce-scatter"] == rs * 4
+    assert out["counts"]["all-gather"] == 10
+
+
+def test_computation_multipliers():
+    mult, comps = computation_multipliers(SYNTH_HLO)
+    assert mult["body"] == 10.0 and mult["cond"] == 10.0
+    assert mult["main"] == 1.0
+    assert "body" in comps and len(comps["main"]) == 2
+
+
+def test_rules_for_head_granularity():
+    """Sub-head splits must fall back to replication (§Perf iteration 0)."""
+    from repro.dist.sharding import rules_for
+    from repro.launch.mesh import make_mesh
+    import os
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices() * 16).reshape(4, 4)[:1, :1], ("data", "model")
+    ) if False else None
+    # build a fake 16-way-model mesh object via make_mesh on 1 device is not
+    # possible; emulate with a simple namespace carrying .shape
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    m = FakeMesh()
+    r = rules_for(get_config("nemotron_4_340b"), m)  # kv=8 % 16 ≠ 0
+    assert r["kv_x_dim"] is None and r["heads_x_dim"] == "model"
+    r = rules_for(get_config("starcoder2_3b"), m)  # heads 24 % 16 ≠ 0
+    assert r["heads_x_dim"] is None
+    r = rules_for(get_config("mamba2_1_3b"), m)  # 64 ssd heads % 16 == 0
+    assert r["ssm_inner"] == "model"
+    r = rules_for(get_config("hymba_1_5b"), m)  # 50 ssd heads % 16 ≠ 0
+    assert r["ssm_inner"] is None and r["state_heads"] is None
+
+
+def test_batched_lu_kernel():
+    from repro.core import make_diagonally_dominant
+    from repro.kernels.batched_lu import batched_lu_vmem, batched_lu_solve_vmem
+    from repro.kernels import ref
+
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    a = jnp.stack([make_diagonally_dominant(k, 24) for k in keys])
+    lu = batched_lu_vmem(a)
+    for i in range(4):
+        np.testing.assert_allclose(
+            np.asarray(lu[i]), ref.lu_ref(np.asarray(a[i])), atol=1e-4
+        )
+    b = jax.random.normal(jax.random.PRNGKey(1), (4, 24, 3))
+    x = batched_lu_solve_vmem(lu, b)
+    res = jnp.linalg.norm(jnp.einsum("bij,bjk->bik", a, x) - b) / jnp.linalg.norm(b)
+    assert float(res) < 1e-5
+
+
+def test_model_flops_accounting():
+    """MoE active-param accounting: granite top-8/32 ⇒ active ≪ total."""
+    from repro.launch.roofline import param_counts
+
+    total, active = param_counts(get_config("granite_moe_1b_a400m"))
+    assert active < total
+    # expert ffn is (total − non_expert); top-8 of 32 keeps 25% of it
+    assert 0.2 < active / total < 0.9
+    t2, a2 = param_counts(get_config("llama3_8b"))
+    assert t2 == a2  # dense: all params active
+    assert 7.5e9 < t2 < 9.5e9  # ≈8B + untied embeddings

@@ -1,0 +1,142 @@
+"""Unit tests for the core EbV LU library (paper's contribution)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    backward_substitution,
+    banded_lu,
+    banded_lu_solve,
+    batched_linear_solve,
+    blocked_lu,
+    cyclic_owners,
+    ebv_folded_owners,
+    ebv_lu,
+    equalized_pairing,
+    fold_index,
+    forward_substitution,
+    from_banded,
+    linear_solve,
+    lu_solve,
+    make_diagonally_dominant,
+    pair_lengths,
+    reconstruct,
+    to_banded,
+)
+from repro.kernels import ref
+
+
+@pytest.mark.parametrize("n", [4, 16, 65, 128])
+def test_ebv_lu_matches_oracle(n):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    got = np.asarray(ebv_lu(a))
+    want = ref.lu_ref(np.asarray(a))
+    np.testing.assert_allclose(got, want, rtol=0, atol=5e-4 * n)
+
+
+@pytest.mark.parametrize("n,block", [(64, 16), (128, 32), (128, 128), (96, 40)])
+def test_blocked_equals_unblocked(n, block):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + block), n)
+    np.testing.assert_allclose(
+        np.asarray(blocked_lu(a, block=block)), np.asarray(ebv_lu(a)), atol=2e-3
+    )
+
+
+def test_reconstruction():
+    a = make_diagonally_dominant(jax.random.PRNGKey(1), 96)
+    rel = float(jnp.abs(reconstruct(ebv_lu(a)) - a).max() / jnp.abs(a).max())
+    assert rel < 1e-5
+
+
+@pytest.mark.parametrize("nrhs", [None, 1, 7])
+def test_solve_residual(nrhs):
+    n = 80
+    a = make_diagonally_dominant(jax.random.PRNGKey(2), n)
+    shape = (n,) if nrhs is None else (n, nrhs)
+    b = jax.random.normal(jax.random.PRNGKey(3), shape)
+    x = lu_solve(ebv_lu(a), b)
+    res = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+    assert res < 1e-5
+
+
+def test_substitution_phases_vs_oracle():
+    n = 48
+    a = make_diagonally_dominant(jax.random.PRNGKey(4), n)
+    lu = ebv_lu(a)
+    b = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    y = forward_substitution(lu, b)
+    np.testing.assert_allclose(np.asarray(y), ref.forward_ref(np.asarray(lu), np.asarray(b)), atol=1e-4)
+    x = backward_substitution(lu, y)
+    np.testing.assert_allclose(np.asarray(x), ref.backward_ref(np.asarray(lu), np.asarray(y)), atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["ebv", "ebv_blocked", "jnp"])
+def test_linear_solve_api(method):
+    n = 64
+    a = make_diagonally_dominant(jax.random.PRNGKey(6), n)
+    b = jax.random.normal(jax.random.PRNGKey(7), (n,))
+    x = linear_solve(a, b, method=method, block=32)
+    assert float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# equalization schedule (the paper's core scheduling idea)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 3, 8, 9, 127, 128])
+def test_equalized_pairing_invariants(n):
+    units = equalized_pairing(n)
+    covered = sorted(r for u in units for r in u)
+    assert covered == list(range(n - 1)), "pairing must be a perfect matching"
+    lengths = pair_lengths(n)
+    pairs = [u for u in units if len(u) == 2]
+    for u, l in zip(units, lengths):
+        if len(u) == 2:
+            assert l == n, "paired work units must have equal total length n"
+    assert len(pairs) == (n - 1) // 2
+
+
+@pytest.mark.parametrize("count", [4, 7, 16])
+def test_fold_index_is_permutation(count):
+    idx = [int(fold_index(i, count)) for i in range(count)]
+    assert sorted(idx) == list(range(count))
+    assert idx[0] == 0 and idx[1] == count - 1
+
+
+@pytest.mark.parametrize("nb,p", [(16, 4), (32, 8), (8, 2)])
+def test_owner_schedules_balanced(nb, p):
+    for sched in (cyclic_owners(nb, p), ebv_folded_owners(nb, p)):
+        counts = [sched.count(d) for d in range(p)]
+        assert max(counts) - min(counts) <= 0
+    # EbV-folded equalizes *work* (trailing size), not just counts:
+    folded = ebv_folded_owners(nb, p)
+    work = [0.0] * p
+    for k, owner in enumerate(folded):
+        work[owner] += nb - k  # panel k trailing work ∝ nb − k
+    assert max(work) - min(work) <= 1.0, "folded schedule must equalize work"
+
+
+# ---------------------------------------------------------------------------
+# banded ("sparse") path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bw", [(32, 1), (64, 4), (100, 9)])
+def test_banded_matches_dense(n, bw):
+    ad = make_diagonally_dominant(jax.random.PRNGKey(n), n, sparse_band=bw)
+    arow = to_banded(ad, bw)
+    assert float(jnp.abs(from_banded(arow) - ad).max()) == 0.0
+    lub = banded_lu(arow, bw=bw)
+    want = ref.banded_lu_ref(np.asarray(arow), bw)
+    np.testing.assert_allclose(np.asarray(lub), want, atol=1e-4)
+    b = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    x = banded_lu_solve(arow, b, bw=bw)
+    assert float(jnp.linalg.norm(ad @ x - b) / jnp.linalg.norm(b)) < 1e-5
+
+
+def test_batched_solver():
+    nb, n = 5, 32
+    keys = jax.random.split(jax.random.PRNGKey(9), nb)
+    a = jnp.stack([make_diagonally_dominant(k, n) for k in keys])
+    b = jax.random.normal(jax.random.PRNGKey(10), (nb, n))
+    x = batched_linear_solve(a, b, method="ebv")
+    res = jnp.linalg.norm(jnp.einsum("bij,bj->bi", a, x) - b, axis=-1) / jnp.linalg.norm(b, axis=-1)
+    assert float(res.max()) < 1e-5

@@ -1,0 +1,98 @@
+"""Pallas kernel sweeps (interpret mode) vs the numpy oracles in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_diagonally_dominant, to_banded
+from repro.kernels import ebv_lu as K
+from repro.kernels import ops, ref
+from repro.kernels.banded import banded_lu_kernelized
+from repro.kernels.trsm import solve_vmem
+
+
+def _tol(dtype, n):
+    return 2e-2 * n if dtype == jnp.bfloat16 else 5e-5 * n
+
+
+@pytest.mark.parametrize("n", [8, 32, 129, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_lu_vmem_sweep(n, dtype):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n, dtype=dtype)
+    got = np.asarray(K.lu_vmem(a), np.float64)
+    want = ref.lu_ref(np.asarray(a, np.float64))
+    np.testing.assert_allclose(got, want, atol=_tol(dtype, n))
+
+
+@pytest.mark.parametrize("m,b", [(32, 8), (64, 64), (96, 32), (128, 16)])
+def test_panel_kernel_sweep(m, b):
+    p = make_diagonally_dominant(jax.random.PRNGKey(m + b), m)[:, :b]
+    # make the top block dominant so the no-pivot contract holds
+    p = p.at[:b, :b].set(make_diagonally_dominant(jax.random.PRNGKey(1), b))
+    got = np.asarray(K.panel(p))
+    want = ref.panel_ref(np.asarray(p))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,block,ct", [(64, 16, 16), (128, 32, 32), (128, 64, 16), (96, 32, 32)])
+def test_pallas_blocked_lu_sweep(n, block, ct):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + block + ct), n)
+    got = np.asarray(ops.lu(a, impl="pallas_blocked", block=block, col_tile=ct))
+    want = ref.lu_ref(np.asarray(a))
+    np.testing.assert_allclose(got, want, atol=5e-3)
+
+
+@pytest.mark.parametrize("n,rhs", [(32, 1), (64, 8), (128, 32)])
+def test_trsm_solve_sweep(n, rhs):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + rhs), n)
+    lu = ops.lu(a, impl="pallas_vmem")
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, rhs))
+    got = np.asarray(solve_vmem(lu, b, rhs_tile=min(8, rhs)))
+    want = ref.solve_ref(np.asarray(lu), np.asarray(b))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+    # end-to-end residual
+    res = np.linalg.norm(np.asarray(a, np.float64) @ got - np.asarray(b)) / np.linalg.norm(np.asarray(b))
+    assert res < 1e-4
+
+
+@pytest.mark.parametrize("n,bw", [(32, 1), (64, 4), (200, 8)])
+def test_banded_kernel_sweep(n, bw):
+    ad = make_diagonally_dominant(jax.random.PRNGKey(n + bw), n, sparse_band=bw)
+    arow = to_banded(ad, bw)
+    got = np.asarray(banded_lu_kernelized(arow, bw=bw))
+    want = ref.banded_lu_ref(np.asarray(arow), bw)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,b,w,ct", [(64, 16, 48, 16), (128, 32, 96, 32)])
+def test_fused_step_kernel(m, b, w, ct):
+    key = jax.random.PRNGKey(m + w)
+    pan = make_diagonally_dominant(key, m)[:, :b]
+    pan = pan.at[:b, :b].set(make_diagonally_dominant(jax.random.PRNGKey(3), b))
+    pan = K.panel(pan)
+    a_top = jax.random.normal(jax.random.PRNGKey(4), (b, w))
+    a_trail = jax.random.normal(jax.random.PRNGKey(5), (m - b, w))
+    u12, trail = K.fused_step(pan, a_top, a_trail, col_tile=ct)
+    u12_ref, trail_ref = ref.fused_step_ref(np.asarray(pan), np.asarray(a_top), np.asarray(a_trail))
+    np.testing.assert_allclose(np.asarray(u12), u12_ref, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(trail), trail_ref, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_update_kernel_dtypes(dtype):
+    m, b, w = 128, 32, 64
+    l21 = jax.random.normal(jax.random.PRNGKey(6), (m, b)).astype(dtype)
+    u12 = jax.random.normal(jax.random.PRNGKey(7), (b, w)).astype(dtype)
+    a22 = jax.random.normal(jax.random.PRNGKey(8), (m, w)).astype(dtype)
+    got = np.asarray(K.update(l21, u12, a22, row_tile=64, col_tile=32), np.float64)
+    want = ref.update_ref(l21.astype(jnp.float32), u12.astype(jnp.float32), a22.astype(jnp.float32))
+    atol = 0.5 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, atol=atol)
+
+
+def test_pallas_vs_xla_impls_agree():
+    n = 128
+    a = make_diagonally_dominant(jax.random.PRNGKey(11), n)
+    lu_p = np.asarray(ops.lu(a, impl="pallas_blocked", block=32, col_tile=32))
+    lu_x = np.asarray(ops.lu(a, impl="xla", block=32))
+    np.testing.assert_allclose(lu_p, lu_x, atol=2e-3)

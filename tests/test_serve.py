@@ -1,0 +1,58 @@
+"""Serving engine tests: batched generation, greedy correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.models import lm
+from repro.serve.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("llama3_8b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_generate_shapes_and_determinism(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, max_len=64)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (3, 8)).astype(np.int32)
+    out1 = eng.generate(prompts, max_new_tokens=5)
+    out2 = eng.generate(prompts, max_new_tokens=5)
+    assert out1.shape == (3, 13)
+    np.testing.assert_array_equal(out1, out2)  # greedy is deterministic
+    assert np.all(out1[:, :8] == prompts)
+    assert np.all((out1 >= 0) & (out1 < cfg.vocab_size))
+
+
+def test_greedy_matches_teacher_forcing(setup):
+    """Each greedy token equals argmax of a fresh full forward over the
+    prefix — validates incremental decode against the stateless model."""
+    cfg, params = setup
+    eng = Engine(params, cfg, max_len=64)
+    prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
+    out = eng.generate(prompts, max_new_tokens=4)
+    for t in range(4):
+        prefix = jnp.asarray(out[:, : 6 + t])
+        _, logits = lm.prefill(params, {"tokens": prefix}, cfg)
+        expect = np.asarray(jnp.argmax(logits[:, -1, : cfg.vocab_size], -1))
+        np.testing.assert_array_equal(out[:, 6 + t], expect)
+
+
+def test_sampled_generation(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, max_len=32)
+    prompts = np.zeros((2, 4), np.int32)
+    out = eng.generate(prompts, max_new_tokens=4, temperature=1.0, seed=7)
+    assert out.shape == (2, 8)
+
+
+def test_moe_engine_smoke():
+    cfg = get_config("granite_moe_1b_a400m").reduced()
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    eng = Engine(params, cfg, max_len=32)
+    out = eng.generate(np.ones((2, 4), np.int32), max_new_tokens=3)
+    assert out.shape == (2, 7)

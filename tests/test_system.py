@@ -1,0 +1,80 @@
+"""End-to-end system behaviour tests.
+
+1. The paper's pipeline: build a CFD-style banded system → EbV LU solve →
+   residual check (what the authors used the solver for).
+2. Training: tiny LM trains, loss decreases, checkpoint-resume continues
+   exactly (fault tolerance).
+3. EbV-preconditioned optimizer end-to-end on a real model.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import banded_lu_solve, linear_solve, to_banded
+from repro.train.loop import TrainConfig, train
+
+
+def _poisson_1d(n):
+    """Tridiagonal Poisson system (CFD pressure-solve stand-in)."""
+    a = np.zeros((n, n), np.float32)
+    idx = np.arange(n)
+    a[idx, idx] = 2.1  # slightly dominant
+    a[idx[:-1], idx[:-1] + 1] = -1.0
+    a[idx[1:], idx[1:] - 1] = -1.0
+    return jnp.asarray(a)
+
+
+def test_cfd_style_solve_end_to_end():
+    n = 512
+    a = _poisson_1d(n)
+    b = jnp.sin(jnp.linspace(0, 3.14, n))
+    x_dense = linear_solve(a, b, method="ebv_blocked", block=64)
+    x_band = banded_lu_solve(to_banded(a, 1), b, bw=1)
+    for x in (x_dense, x_band):
+        res = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+        assert res < 1e-5
+    np.testing.assert_allclose(np.asarray(x_dense), np.asarray(x_band), atol=1e-3)
+
+
+def test_training_loss_decreases_and_resumes(tmp_path):
+    cfg = get_config("llama3_8b").reduced()
+    tc = TrainConfig(steps=25, seq_len=64, global_batch=4, warmup_steps=5,
+                     learning_rate=1e-3, ckpt_dir=str(tmp_path), ckpt_every=10,
+                     log_every=100)
+    params, hist = train(cfg, tc)
+    losses = [h["loss"] for h in hist]
+    assert losses[-1] < losses[0] - 0.5, losses[:3] + losses[-3:]
+    # resume: a fresh invocation continues from the checkpoint
+    tc2 = TrainConfig(steps=27, seq_len=64, global_batch=4, warmup_steps=5,
+                      learning_rate=1e-3, ckpt_dir=str(tmp_path), ckpt_every=100,
+                      log_every=100)
+    _, hist2 = train(cfg, tc2)
+    assert hist2[0]["step"] == 25
+    assert len(hist2) == 2
+
+
+def test_ebv_optimizer_trains_model():
+    cfg = get_config("starcoder2_3b").reduced()
+    tc = TrainConfig(steps=10, seq_len=32, global_batch=2, warmup_steps=2,
+                     learning_rate=1e-3, optimizer="ebv", log_every=100)
+    params, hist = train(cfg, tc)
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.1
+
+
+def test_microbatched_step_equivalence():
+    from repro.train.loop import make_train_step
+    from repro.train import optimizer as opt_lib
+    from repro.models import lm
+
+    cfg = get_config("llama3_8b").reduced()
+    opt = opt_lib.adamw(opt_lib.constant_lr(1e-3))
+    p0 = lm.init_params(jax.random.PRNGKey(1), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (4, 64), 0, cfg.vocab_size)}
+    p1, _, m1 = jax.jit(make_train_step(cfg, opt, microbatches=1))(p0, opt.init(p0), batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, opt, microbatches=2))(p0, opt.init(p0), batch)
+    diff = max(float(jnp.abs(a - b).max()) for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert diff < 1e-4
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 1e-3
