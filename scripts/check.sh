@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one command (ROADMAP.md).  Runs the full test
+# suite from the repo root; tests/conftest.py forces the deterministic
+# 8-host-device XLA environment.  Extra pytest args pass through:
+#
+#     scripts/check.sh                 # everything
+#     scripts/check.sh tests/test_distributed.py -k lu
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.sharding import shard_map
 from .blocked import panel_factor, cyclic_owners, ebv_folded_owners
 from .solve import unit_lower_solve_packed, backward_substitution, forward_substitution
 
@@ -117,11 +118,12 @@ def distributed_blocked_lu(
     from jax.sharding import PartitionSpec as P
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local_fn,
             mesh=mesh,
             in_specs=P(axis, None, None),
             out_specs=P(axis, None, None),
+            check_vma=False,
         )
     )
     a_perm = a[:, perm]
@@ -188,11 +190,12 @@ def distributed_lu_solve(
     from jax.sharding import PartitionSpec as P
 
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             local_fn,
             mesh=mesh,
             in_specs=(P(axis, None, None), P()),
             out_specs=P(),
+            check_vma=False,
         )
     )
     a_perm = a[:, perm].reshape(n, num_devices, -1).transpose(1, 0, 2)

@@ -1,0 +1,4 @@
+"""Distribution layer: logical-axis sharding policy (:mod:`.sharding`) and
+pipeline parallelism (:mod:`.pipeline_par`).  See ``README.md`` in this
+directory for the design."""
+from . import sharding  # noqa: F401

@@ -1,0 +1,76 @@
+"""GPipe pipeline parallelism over one mesh axis.
+
+The stage dimension of the weights is sharded over ``axis``; microbatches
+flow through the ranks with a single-hop ``ppermute`` per tick.  Tick ``t``
+has rank ``r`` working on microbatch ``t − r`` (inactive ranks compute on
+zeros — SPMD uniformity, same trick as the EbV equal-block schedule), so a
+full forward takes ``M + P − 1`` ticks and the idle ("bubble") fraction is
+``(P − 1) / (M + P − 1)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .sharding import shard_map
+
+
+def bubble_fraction(num_stages: int, num_microbatches: int) -> float:
+    """Idle fraction of the GPipe schedule: (P−1)/(M+P−1)."""
+    p, m = num_stages, num_microbatches
+    return (p - 1) / (m + p - 1)
+
+
+def gpipe_forward(stage_fn, stage_params, microbatches, *, mesh, axis: str = "pipe"):
+    """Run ``microbatches`` through ``num_stages`` pipeline stages.
+
+    stage_fn: ``(w, x) -> y`` for one stage on one microbatch.
+    stage_params: pytree whose leaves lead with the stage dimension
+    (``(P, ...)``), sharded over ``axis``.
+    microbatches: ``(M, ...)`` array, replicated.
+
+    Returns the ``(M, ...)`` outputs of the final stage, replicated (the
+    last rank's results are broadcast with one masked ``psum``).
+    """
+    num_stages = dict(mesh.shape)[axis]
+    num_mb = microbatches.shape[0]
+    ticks = num_mb + num_stages - 1
+
+    def local_fn(w, xs):
+        w = jax.tree.map(lambda a: a[0], w)  # drop the sharded stage dim
+        r = jax.lax.axis_index(axis)
+
+        def tick(carry, t):
+            out_buf, x_in = carry
+            mb = t - r
+            active = (mb >= 0) & (mb < num_mb)
+            mb_c = jnp.clip(mb, 0, num_mb - 1)
+            inp = jnp.where(r == 0, xs[mb_c], x_in)
+            y = stage_fn(w, inp)
+            y = jnp.where(active, y, jnp.zeros_like(y))
+            nxt = jax.lax.ppermute(
+                y, axis, [(i, i + 1) for i in range(num_stages - 1)]
+            )
+            upd = jax.lax.dynamic_update_slice_in_dim(out_buf, y[None], mb_c, axis=0)
+            out_buf = jnp.where(active & (r == num_stages - 1), upd, out_buf)
+            return (out_buf, nxt), None
+
+        init = (jnp.zeros_like(xs), jnp.zeros_like(xs[0]))
+        (out_buf, _), _ = jax.lax.scan(
+            tick, init, jnp.arange(ticks, dtype=jnp.int32)
+        )
+        # only the last rank holds real outputs; masked-psum broadcast
+        return jax.lax.psum(out_buf, axis)
+
+    stage_specs = jax.tree.map(
+        lambda a: P(axis, *(None,) * (a.ndim - 1)), stage_params
+    )
+    fn = shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(stage_specs, P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(stage_params, microbatches)

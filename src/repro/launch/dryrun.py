@@ -35,7 +35,7 @@ from repro.dist import sharding as shlib
 from repro.launch import specs as S
 from repro.launch.mesh import make_production_mesh
 from repro.utils import flags
-from repro.utils.hlo import collective_bytes, op_histogram
+from repro.utils.hlo import collective_bytes, cost_analysis_dict, op_histogram
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
 
@@ -54,7 +54,7 @@ def _compile_cost(cfg, cell, mesh, rules):
         fn, args, axes = S.make_cell_fn(cfg, cell)
         in_sh = S.shardings_for_args(args, axes, mesh, rules)
         compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = collective_bytes(hlo, num_devices=mesh.devices.size, weighted=True)
     return {
@@ -122,7 +122,7 @@ def run_cell(arch: str, cell_name: str, *, multi_pod: bool, out_dir: str, force:
             t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         fallbacks = [list(x) for x in (shlib._CTX.log or [])]
         t1 = time.time()

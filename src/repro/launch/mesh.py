@@ -12,19 +12,35 @@ from __future__ import annotations
 import jax
 
 
+def _make(shape, axes) -> jax.sharding.Mesh:
+    # axis_types only exists on newer jax; Auto is the default there anyway.
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(shape, axes)
 
 
 def make_mesh(shape, axes) -> jax.sharding.Mesh:
     """Arbitrary mesh (tests / examples / PP experiments)."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _make(tuple(shape), tuple(axes))
+
+
+def parse_mesh_arg(arg: str) -> jax.sharding.Mesh:
+    """CLI ``--mesh`` spec → mesh: ``8`` → (model,), ``2x4`` →
+    (data, model), ``2x2x2`` → (pod, data, model)."""
+    dims = tuple(int(x) for x in arg.split("x"))
+    names = {1: ("model",), 2: ("data", "model"), 3: ("pod", "data", "model")}.get(len(dims))
+    if names is None:
+        raise SystemExit(f"--mesh takes 1-3 'x'-separated dims, got {arg!r}")
+    return make_mesh(dims, names)
 
 
 # v5e hardware constants used by the roofline analysis (EXPERIMENTS.md).

@@ -28,7 +28,7 @@ def main():
     import numpy as np
     from repro.configs.base import get_config
     from repro.dist import sharding as shlib
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import parse_mesh_arg
     from repro.models import lm
     from repro.serve.engine import Engine
 
@@ -43,9 +43,7 @@ def main():
     max_len = args.prompt_len + args.new_tokens + cfg.num_prefix_embeds + 8
 
     if args.mesh:
-        dims = tuple(int(x) for x in args.mesh.split("x"))
-        names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-        mesh = make_mesh(dims, names)
+        mesh = parse_mesh_arg(args.mesh)
         with shlib.use_mesh_rules(mesh):
             eng = Engine(params, cfg, max_len=max_len)
             out = eng.generate(prompts, max_new_tokens=args.new_tokens)

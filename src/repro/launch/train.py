@@ -39,7 +39,7 @@ def main():
     import jax
     from repro.configs.base import get_config
     from repro.dist import sharding as shlib
-    from repro.launch.mesh import make_mesh, make_production_mesh
+    from repro.launch.mesh import make_production_mesh, parse_mesh_arg
     from repro.launch import specs as S
     from repro.models import lm
     from repro.train.loop import TrainConfig, train
@@ -50,9 +50,7 @@ def main():
 
     mesh = None
     if args.mesh:
-        dims = tuple(int(x) for x in args.mesh.split("x"))
-        names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
-        mesh = make_mesh(dims, names)
+        mesh = parse_mesh_arg(args.mesh)
     elif jax.device_count() >= 256:
         mesh = make_production_mesh(multi_pod=jax.device_count() >= 512)
 

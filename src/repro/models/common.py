@@ -314,7 +314,7 @@ def ebv_attention_sharded(q, k, v, *, q_positions, window, scale=None):
         blk_odd = _exchange(o_lo, o_hi, [(q3, 0), (q4, 1)])
         return jnp.concatenate([blk_even, blk_odd], axis=1)  # (Bl, 2c, H·Dh)
 
-    fn = jax.shard_map(
+    fn = shlib.shard_map(
         local,
         mesh=mesh,
         in_specs=(

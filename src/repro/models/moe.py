@@ -142,7 +142,7 @@ def apply_moe(p, x, cfg: ModelConfig):
             break
         batch_axes = batch_axes[:-1]
     tp = "model" in mesh.axis_names and s % mesh.shape["model"] == 0
-    x_spec = P(batch_axes, "model" if tp else None, None)
+    x_spec = P(batch_axes or None, "model" if tp else None, None)
     w_ff = P(None, None, "model") if tp else P(None, None, None)
     w_fd = P(None, "model", None) if tp else P(None, None, None)
 
@@ -164,7 +164,7 @@ def apply_moe(p, x, cfg: ModelConfig):
             aux = jax.lax.pmean(aux, batch_axes)
         return out, aux
 
-    fn = jax.shard_map(
+    fn = sh.shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(x_spec, P(None, None), w_ff, w_fd, w_ff),

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.dist.sharding import shard_map
+
 
 def quantize(x, *, bits: int = 8):
     """Symmetric per-tensor int8 quantization; returns (q, scale)."""
@@ -73,7 +75,7 @@ def compressed_psum(grads, error, *, mesh, axis: str = "pod"):
         )
         return red, new_e
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(), P()), out_specs=(P(), P()),
         check_vma=False,

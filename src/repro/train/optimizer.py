@@ -125,15 +125,21 @@ def ebv_preconditioned(
     max_grad_norm: float | None = 1.0,
     damping: float = 1e-3,
     max_precond_dim: int = 1024,
-    update_every: int = 1,
     solver_block: int = 128,
+    graft_scale: float = 0.3,
 ) -> Optimizer:
     """Second-order preconditioning via EbV LU solves.
 
     Eligible leaves: 2-D with min(shape) ≤ ``max_precond_dim`` — the
     covariance is built on the smaller dim.  Ineligible leaves fall back to
-    AdamW.  The preconditioned direction is norm-grafted onto the Adam
-    magnitude, which makes it a drop-in swap.
+    AdamW.  Per step: the covariance EMA sees the *raw* gradient (clipping
+    rescales each step differently, and an EMA over inconsistently-scaled
+    G·Gᵀ terms stops estimating curvature), the solve's right-hand side is
+    the bias-corrected Adam momentum (built from clipped gradients); the
+    solved direction is then norm-grafted onto ``graft_scale ×`` the Adam
+    step's magnitude — Shampoo-style grafting, which inherits Adam's
+    step-size decay near convergence instead of re-normalizing the whitened
+    direction to a constant-size step (that oscillates on stiff problems).
     """
     from repro.core.blocked import blocked_lu
     from repro.core.solve import lu_solve
@@ -157,43 +163,66 @@ def ebv_preconditioned(
         return st
 
     def update(grads, state, params):
+        gnorm = global_norm(grads)
         if max_grad_norm is not None:
-            grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+            clip_scale = jnp.minimum(1.0, max_grad_norm / jnp.maximum(gnorm, 1e-9))
         else:
-            gnorm = global_norm(grads)
+            clip_scale = jnp.float32(1.0)
 
         step = state["step"] + 1
+        lr = schedule(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
 
-        def precondition(g, cov, p):
-            if not eligible(p):
-                return g, cov
-            g32 = g.astype(jnp.float32)
-            left = p.shape[0] <= p.shape[1]
-            gg = g32 @ g32.T if left else g32.T @ g32
-            cov = b2 * cov + (1 - b2) * gg
-            n = cov.shape[0]
-            tr = jnp.trace(cov) / n
-            a = cov / jnp.maximum(tr, 1e-12) + damping * jnp.eye(n, dtype=jnp.float32)
-            # the paper's solver: blocked EbV LU + two-phase substitution
-            lu = blocked_lu(a, block=min(solver_block, n))
-            pre = lu_solve(lu, g32) if left else lu_solve(lu, g32.T).T
-            # norm grafting: keep Adam-scale magnitude
-            pre = pre * (jnp.linalg.norm(g32) / jnp.maximum(jnp.linalg.norm(pre), 1e-12))
-            return pre.astype(g.dtype), cov
+        def upd(p, g, mu, nu, cov):
+            gc32 = g.astype(jnp.float32) * clip_scale
+            mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * gc32
+            nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * gc32 * gc32
+            adam_dir = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + eps)
+            if eligible(p):
+                # covariance on the RAW gradient: clipping rescales every
+                # step by a different factor, and an EMA over
+                # inconsistently-scaled G·Gᵀ terms stops estimating
+                # curvature.
+                g32 = g.astype(jnp.float32)
+                left = p.shape[0] <= p.shape[1]
+                gg = g32 @ g32.T if left else g32.T @ g32
+                cov = b2 * cov + (1 - b2) * gg
+                n = cov.shape[0]
+                tr = jnp.trace(cov) / n
+                a = cov / jnp.maximum(tr, 1e-12) + damping * jnp.eye(n, dtype=jnp.float32)
+                # the paper's solver: blocked EbV LU + two-phase
+                # substitution, applied to the bias-corrected momentum
+                lu = blocked_lu(a, block=min(solver_block, n))
+                rhs = mu32 / bc1
+                pre = lu_solve(lu, rhs) if left else lu_solve(lu, rhs.T).T
+                # graft onto (a fraction of) the Adam step's magnitude so
+                # the step size decays with Adam's near convergence
+                target = graft_scale * jnp.linalg.norm(adam_dir)
+                step_dir = pre * (target / jnp.maximum(jnp.linalg.norm(pre), 1e-12))
+            else:
+                step_dir = adam_dir
+            if weight_decay and p.ndim >= 2:  # no decay on norms/scalars
+                step_dir = step_dir + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
+            return newp, mu32.astype(mu.dtype), nu32.astype(nu.dtype), cov
 
         flat_g, treedef = jax.tree.flatten(grads)
-        flat_c = treedef.flatten_up_to(state["cov"])
         flat_p = treedef.flatten_up_to(params)
-        out = [precondition(g, c, p) for g, c, p in zip(flat_g, flat_c, flat_p)]
-        pre_g = treedef.unflatten([o[0] for o in out])
-        cov = treedef.unflatten([o[1] for o in out])
-
-        adam_state = {k: state[k] for k in ("step", "mu", "nu")}
-        newp, new_adam = adam.update(pre_g, adam_state, params)
-        new_adam["cov"] = cov
-        new_adam["gnorm"] = gnorm
-        new_adam["step"] = step
-        return newp, new_adam
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_c = treedef.flatten_up_to(state["cov"])
+        out = [
+            upd(p, g, mu, nu, c)
+            for p, g, mu, nu, c in zip(flat_p, flat_g, flat_mu, flat_nu, flat_c)
+        ]
+        return treedef.unflatten([o[0] for o in out]), {
+            "step": step,
+            "mu": treedef.unflatten([o[1] for o in out]),
+            "nu": treedef.unflatten([o[2] for o in out]),
+            "cov": treedef.unflatten([o[3] for o in out]),
+            "gnorm": gnorm,
+        }
 
     return Optimizer(init, update)
 

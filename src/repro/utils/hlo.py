@@ -178,3 +178,13 @@ def op_histogram(hlo_text: str, ops=("fusion", "custom-call", "while", "dot", "c
             if f" {op}(" in line:
                 hist[op] += 1
     return dict(hist)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """jax-version-portable ``Compiled.cost_analysis()``: newer jax returns a
+    flat dict, older releases a one-element list of dicts (per device
+    assignment).  Always returns the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

@@ -1,0 +1,108 @@
+"""Minimal deterministic stand-in for the tiny slice of `hypothesis` that
+tests/test_property.py uses, so the property tests still run in containers
+without the real package (which cannot be installed here).
+
+Implements: ``given``/``settings`` decorators and the ``st.data()``,
+``st.integers``, ``st.floats``, ``st.lists`` strategies with seeded random
+sampling (first example minimal, then uniform draws).  NOT a general
+hypothesis replacement — no shrinking, no database, no stateful testing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def sample(self, rng, minimal=False):
+        return self._draw(rng, minimal)
+
+
+class _DataStrategy(_Strategy):
+    def __init__(self):
+        super().__init__(None)
+
+
+class _DataObject:
+    """Mirrors hypothesis's interactive ``data.draw(strategy)``."""
+
+    def __init__(self, rng, minimal):
+        self._rng = rng
+        self._minimal = minimal
+
+    def draw(self, strategy):
+        return strategy.sample(self._rng, self._minimal)
+
+
+class st:
+    @staticmethod
+    def data():
+        return _DataStrategy()
+
+    @staticmethod
+    def integers(min_value, max_value):
+        def draw(rng, minimal):
+            if minimal:
+                return int(min_value)
+            return int(rng.integers(min_value, max_value + 1))
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, allow_nan=False, width=64):
+        lo = -1e6 if min_value is None else float(min_value)
+        hi = 1e6 if max_value is None else float(max_value)
+
+        def draw(rng, minimal):
+            if minimal:
+                return 0.0 if lo <= 0.0 <= hi else lo
+            return float(np.float32(rng.uniform(lo, hi)) if width == 32 else rng.uniform(lo, hi))
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng, minimal):
+            n = min_size if minimal else int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng, minimal) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        # zero-arg wrapper (like hypothesis) so pytest doesn't mistake the
+        # strategy parameters for fixtures
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples", DEFAULT_EXAMPLES)
+            for example in range(n):
+                rng = np.random.default_rng(example)
+                minimal = example == 0
+                drawn = [
+                    _DataObject(rng, minimal)
+                    if isinstance(s, _DataStrategy)
+                    else s.sample(rng, minimal)
+                    for s in strategies
+                ]
+                fn(*drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = getattr(
+            fn, "_fallback_max_examples", DEFAULT_EXAMPLES
+        )
+        return wrapper
+
+    return deco

@@ -1,9 +1,15 @@
 import os
 import sys
 
-# Tests run on the single real CPU device (the 512-device XLA flag is only
-# ever set inside launch/dryrun.py or in subprocesses spawned by
-# test_distributed.py).
+# Deterministic multi-device environment for tier-1: force 8 host devices
+# centrally, BEFORE any jax import (the backend locks device count on first
+# init).  test_distributed.py subprocesses strip XLA_FLAGS from their env
+# and set their own count; launch/dryrun.py likewise sets 512 itself.
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+    ).strip()
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

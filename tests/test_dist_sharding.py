@@ -1,0 +1,153 @@
+"""Focused unit tests for the repro.dist sharding policy layer:
+rules_for divisibility fallback, resolve_spec rank/axes edge cases,
+constrain as a no-op outside any mesh context, pytree helpers, and the
+pipeline bubble math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import get_config
+from repro.dist import sharding as sh
+from repro.dist.pipeline_par import bubble_fraction
+
+
+class Mesh16:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class Mesh4:
+    axis_names = ("data", "model")
+    shape = {"data": 2, "model": 4}
+
+
+class MeshPod:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 8, "model": 16}
+
+
+# ---------------------------------------------------------------------------
+# rules_for
+# ---------------------------------------------------------------------------
+def test_rules_for_divisibility_fallback_across_configs():
+    # llama3: 32 heads / 8 kv on a 16-way model axis — q sharded, kv not
+    r = sh.rules_for(get_config("llama3_8b"), Mesh16())
+    assert r["heads_x_dim"] == "model" and r["kv_x_dim"] is None
+    assert r["cache_kv"] is None
+    # same config on a 4-way model axis: kv=8 divides — everything sharded
+    r4 = sh.rules_for(get_config("llama3_8b"), Mesh4())
+    assert r4["heads_x_dim"] == "model" and r4["kv_x_dim"] == "model"
+    # mixtral: 8 experts; 48 heads / 8 kv behave like llama on 16-way
+    r = sh.rules_for(get_config("mixtral_8x22b"), Mesh16())
+    assert r["kv_x_dim"] is None and r["heads_x_dim"] == "model"
+    # whisper_tiny: 6 heads — replicated on both mesh sizes
+    assert sh.rules_for(get_config("whisper_tiny"), Mesh16())["heads_x_dim"] is None
+    assert sh.rules_for(get_config("whisper_tiny"), Mesh4())["heads_x_dim"] is None
+
+
+def test_rules_for_logs_fallbacks_and_respects_base():
+    with sh.use_mesh_rules(None):
+        sh._CTX.log = []
+        sh.rules_for(get_config("nemotron_4_340b"), Mesh16())
+        assert any(entry[0] == "kv_x_dim" for entry in sh._CTX.log)
+    base = dict(sh.RULE_PRESETS["default"], heads_x_dim=None)
+    r = sh.rules_for(get_config("llama3_8b"), Mesh16(), base)
+    assert r["heads_x_dim"] is None  # base override survives
+
+
+def test_rules_for_config_overrides():
+    cfg = get_config("llama3_8b").replace(
+        logical_rules_overrides=(("ff", None),)
+    )
+    assert sh.rules_for(cfg, Mesh4())["ff"] is None
+
+
+# ---------------------------------------------------------------------------
+# resolve_spec
+# ---------------------------------------------------------------------------
+def test_resolve_spec_basic_and_dim_fallback():
+    rules = sh.RULE_PRESETS["default"]
+    # (embed, ff): ff divisible -> sharded on model
+    assert sh.resolve_spec((64, 128), ("embed", "ff"), mesh=Mesh4(), rules=rules) == P(None, "model")
+    # indivisible dim replicates instead of padding
+    assert sh.resolve_spec((64, 126), ("embed", "ff"), mesh=Mesh4(), rules=rules) == P()
+    # scalar / empty axes
+    assert sh.resolve_spec((), (), mesh=Mesh4(), rules=rules) == P()
+
+
+def test_resolve_spec_rank_edge_cases():
+    rules = sh.RULE_PRESETS["default"]
+    # axes shorter than rank are padded with None
+    assert sh.resolve_spec((8, 64, 32), ("act_batch",), mesh=Mesh4(), rules=rules) == P("data")
+    # axes longer than rank is a caller bug
+    with pytest.raises(ValueError):
+        sh.resolve_spec((8,), ("act_batch", "act_seq"), mesh=Mesh4(), rules=rules)
+    # no mesh anywhere -> fully replicated
+    assert sh.resolve_spec((8, 8), ("act_batch", "act_seq")) == P()
+
+
+def test_resolve_spec_multi_axis_rule_and_missing_axes():
+    rules = sh.RULE_PRESETS["default"]
+    # act_batch maps to ("pod", "data"); on a pod mesh both are used
+    spec = sh.resolve_spec((32, 64, 16), ("act_batch", "act_seq", "act_embed"),
+                           mesh=MeshPod(), rules=rules)
+    assert spec == P(("pod", "data"), "model")
+    # on a pod-less mesh the missing axis is silently dropped
+    spec = sh.resolve_spec((32, 64, 16), ("act_batch", "act_seq", "act_embed"),
+                           mesh=Mesh4(), rules=rules)
+    assert spec == P("data", "model")
+    # a mesh axis is never used twice in one spec
+    rules2 = {"a": "model", "b": "model"}
+    assert sh.resolve_spec((8, 8), ("a", "b"), mesh=Mesh4(), rules=rules2) == P("model")
+
+
+# ---------------------------------------------------------------------------
+# constrain / context
+# ---------------------------------------------------------------------------
+def test_constrain_noop_outside_mesh():
+    assert sh.active_mesh() is None
+    x = jnp.ones((4, 8))
+    y = sh.constrain(x, ("act_batch", "act_seq"))
+    assert y is x  # identity, not a copy
+
+
+def test_use_mesh_rules_restores_and_keeps_log():
+    class M:
+        axis_names = ("model",)
+        shape = {"model": 4}
+
+    m = M()
+    with sh.use_mesh_rules(m, {"ff": "model"}):
+        assert sh.active_mesh() is m
+        assert sh.active_rules()["ff"] == "model"
+        sh.resolve_spec((6,), ("ff",), mesh=m)  # 6 % 4 != 0 -> logged
+    assert sh.active_mesh() is None
+    assert sh._CTX.log, "fallback log must survive context exit"
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+def test_split_axes_and_prepend_axis():
+    tree = {
+        "w": (jnp.ones((2, 3)), ("embed", "ff")),
+        "scale": (jnp.ones((3,)), ("ff",)),
+        "bare": jnp.ones((4,)),
+    }
+    arrays, axes = sh.split_axes(tree)
+    assert arrays["w"].shape == (2, 3) and axes["w"] == ("embed", "ff")
+    assert axes["bare"] == (None,)
+    stacked = sh.prepend_axis(axes, "layers")
+    assert stacked["w"] == ("layers", "embed", "ff")
+    assert stacked["scale"] == ("layers", "ff")
+
+
+# ---------------------------------------------------------------------------
+# pipeline math
+# ---------------------------------------------------------------------------
+def test_bubble_fraction():
+    assert abs(bubble_fraction(4, 8) - 3 / 11) < 1e-12
+    assert bubble_fraction(1, 8) == 0.0
+    assert abs(bubble_fraction(8, 8) - 7 / 15) < 1e-12
