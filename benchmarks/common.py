@@ -16,18 +16,17 @@ import numpy as np
 
 
 def time_call(fn, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall seconds per call (blocks on jax arrays)."""
+    """Median wall seconds per call (blocks on jax arrays).
+
+    Warmup blocks on the whole result pytree — tuple/list results used to
+    slip through (``hasattr`` guard was False for containers), letting the
+    first timed iter absorb the warmup call's compile+dispatch."""
     for _ in range(warmup):
-        r = fn(*args)
-        jax.block_until_ready(r) if hasattr(r, "block_until_ready") or isinstance(r, jax.Array) else None
+        jax.block_until_ready(fn(*args))
     times = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        r = fn(*args)
-        if isinstance(r, jax.Array):
-            r.block_until_ready()
-        elif isinstance(r, (tuple, list)):
-            jax.block_until_ready(r)
+        jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     return float(np.median(times))
 

@@ -2,26 +2,72 @@
 
 Prints ``name,us_per_call,derived`` CSV (brief contract).  ``--full`` runs
 the paper's full matrix sizes (up to 16000); default sizes keep the suite
-CPU-friendly.
+CPU-friendly.  ``--smoke`` runs a fast CI subset (table2 at n=256 plus the
+LU kernel-impl shootout at n∈{256, 1024}) and writes ``BENCH_kernels.json``
+(name → us_per_call) at the repo root, seeding the perf trajectory across
+PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+SMOKE_LU_SIZES = (256, 1024)
+SMOKE_LU_IMPLS = ("pallas_fused", "pallas_blocked", "xla")
+
+
+def smoke(out_path: str | None = None) -> dict[str, float]:
+    """Fast perf smoke: table2 at small size + per-impl LU kernel timings.
+
+    Returns (and writes to ``out_path``) ``{name: us_per_call}``.  The
+    ``lu_n1024_*`` entries are the tracked fused-vs-blocked wall-time
+    comparison."""
+    import jax
+
+    from repro.core import make_diagonally_dominant
+    from repro.kernels import ops as kops
+    from . import table2_dense
+    from .common import emit, time_call
+
+    rows_us: dict[str, float] = {}
+    for name, secs in table2_dense.run(sizes=[256]).items():
+        rows_us[name] = secs * 1e6
+    for n in SMOKE_LU_SIZES:
+        a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+        for impl in SMOKE_LU_IMPLS:
+            fn = lambda a: kops.lu(a, impl=impl)
+            t = time_call(fn, a, iters=5)
+            rows_us[f"lu_n{n}_{impl}"] = t * 1e6
+            emit(f"lu_n{n}_{impl}", t)
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_kernels.json")
+    with open(out_path, "w") as f:
+        json.dump({k: round(v, 1) for k, v in rows_us.items()}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path}", file=sys.stderr)
+    return rows_us
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-size matrices (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset; writes BENCH_kernels.json")
     ap.add_argument(
         "--only", default=None,
         choices=["table1", "table2", "table3", "lm_step"],
     )
     args = ap.parse_args()
 
+    print("name,us_per_call,derived")
+    if args.smoke:
+        smoke()
+        return
+
     from . import table1_sparse, table2_dense, table3_transfer, lm_step
 
-    print("name,us_per_call,derived")
     mods = {
         "table1": table1_sparse,
         "table2": table2_dense,

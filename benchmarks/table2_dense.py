@@ -1,4 +1,9 @@
-"""Paper Table 2: dense LU factorization+solve times and speedup."""
+"""Paper Table 2: dense LU factorization+solve times and speedup.
+
+Two EbV rows per size: the pure-jnp blocked path (``xla``) and the
+single-dispatch fused Pallas megakernel (``pallas_fused``), both against the
+sequential numpy rank-1 baseline (the paper's "CPU" column).
+"""
 from __future__ import annotations
 
 import jax
@@ -6,14 +11,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import blocked_lu, lu_solve, make_diagonally_dominant
+from repro.kernels import ops as kops
 from .common import emit, numpy_lu_baseline, time_call
 
 SIZES = [256, 512, 1024, 2048]
 FULL_SIZES = [500, 1000, 2000, 4000, 8000]
 
 
-def run(full: bool = False):
-    sizes = FULL_SIZES if full else SIZES
+def run(full: bool = False, sizes: list[int] | None = None) -> dict[str, float]:
+    sizes = sizes if sizes is not None else (FULL_SIZES if full else SIZES)
+    rows: dict[str, float] = {}
     for n in sizes:
         a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
         b = jax.random.normal(jax.random.PRNGKey(1), (n,))
@@ -22,11 +29,19 @@ def run(full: bool = False):
         ebv = jax.jit(lambda a, b: lu_solve(blocked_lu(a, block=block), b))
         t_ebv = time_call(ebv, a, b)
 
+        fused = jax.jit(lambda a, b: kops.lu_solve(kops.lu(a, impl="pallas_fused", block=block), b))
+        t_fused = time_call(fused, a, b)
+
         a_np = np.asarray(a, np.float64)
         t_base = time_call(lambda: numpy_lu_baseline(a_np), iters=1)
 
+        rows[f"table2_dense_n{n}_ebv"] = t_ebv
+        rows[f"table2_dense_n{n}_ebv_fused"] = t_fused
+        rows[f"table2_dense_n{n}_baseline"] = t_base
         emit(f"table2_dense_n{n}_ebv", t_ebv, f"speedup={t_base / t_ebv:.1f}")
+        emit(f"table2_dense_n{n}_ebv_fused", t_fused, f"speedup={t_base / t_fused:.1f}")
         emit(f"table2_dense_n{n}_baseline", t_base, "")
+    return rows
 
 
 if __name__ == "__main__":

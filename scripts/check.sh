@@ -1,10 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 verification in one command (ROADMAP.md).  Runs the full test
-# suite from the repo root; tests/conftest.py forces the deterministic
-# 8-host-device XLA environment.  Extra pytest args pass through:
+# suite from the repo root, then the perf smoke (benchmarks/run.py --smoke,
+# which writes BENCH_kernels.json for the cross-PR perf trajectory).
+# tests/conftest.py forces the deterministic 8-host-device XLA environment.
+# Extra pytest args pass through:
 #
 #     scripts/check.sh                 # everything
 #     scripts/check.sh tests/test_distributed.py -k lu
+#     SKIP_SMOKE=1 scripts/check.sh    # tests only
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke
+fi

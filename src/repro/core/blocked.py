@@ -21,7 +21,118 @@ import jax.numpy as jnp
 
 from .solve import unit_lower_solve_packed
 
-__all__ = ["panel_factor", "blocked_lu", "ebv_folded_owners", "cyclic_owners"]
+__all__ = [
+    "panel_factor",
+    "blocked_lu",
+    "fused_blocked_lu",
+    "fused_block_size",
+    "sub_block_width",
+    "strip_trsm",
+    "factor_diag_strip",
+    "solve_below_strip",
+    "pad_identity_tail",
+    "ebv_folded_owners",
+    "cyclic_owners",
+]
+
+
+def sub_block_width(block: int) -> int:
+    """Strip width of the two-level (axpy-in-strip, GEMM-retire) panel/trsm
+    scheme.  Shared by :func:`fused_blocked_lu` and the Pallas megakernel
+    (:func:`repro.kernels.ebv_lu.lu_fused`) so both trace identical op
+    shapes — the basis of their bitwise equality."""
+    return next((c for c in (32, 16, 8) if block % c == 0), block)
+
+
+def pad_identity_tail(a: jax.Array, n_to: int) -> jax.Array:
+    """Embed square ``a`` in an (n_to, n_to) array with an identity tail —
+    inert under no-pivot elimination and substitution (unit pivots, zero
+    coupling).  Shared by the fused LU drivers and the tiled solve."""
+    n = a.shape[-1]
+    if n_to == n:
+        return a
+    pad_ix = jnp.arange(n, n_to)
+    return jnp.zeros((n_to, n_to), a.dtype).at[:n, :n].set(a).at[pad_ix, pad_ix].set(1.0)
+
+
+def strip_trsm(ldiag: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Unit-lower solve of a ``(C2, w)`` strip against the ``(C2, C2)``
+    diagonal block, as a short sequential masked-axpy recurrence on an array
+    carry.  Shared verbatim by the megakernel and its mirror — both sides
+    trace this exact jaxpr, so their bitwise equality holds by construction."""
+    c2 = ldiag.shape[0]
+    w = rhs.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c2, 1), 0)
+
+    def body(k, u):
+        lk = jnp.where(rows > k, jax.lax.dynamic_slice(ldiag, (0, k), (c2, 1)), 0.0)
+        uk = jax.lax.dynamic_slice(u, (k, 0), (1, w))
+        return u - lk * uk
+
+    return jax.lax.fori_loop(0, c2 - 1, body, rhs)
+
+
+def factor_diag_strip(dblk: jax.Array, j: int) -> jax.Array:
+    """Bi-vectorized (rank-1) factorization of the ``(B, C2)`` diagonal-block
+    strip whose pivot rows start at local row ``j``; rows above ``j+k`` are
+    masked no-ops (they hold final U values).  Shared kernel/mirror code."""
+    b, c2 = dblk.shape
+    rows_b = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    cols_c2 = jax.lax.broadcasted_iota(jnp.int32, (1, c2), 1)
+
+    def dstep(k, d):
+        piv = jax.lax.dynamic_slice(d, (j + k, k), (1, 1))
+        urow = jnp.where(cols_c2 > k, jax.lax.dynamic_slice(d, (j + k, 0), (1, c2)), 0.0)
+        colb = jax.lax.dynamic_slice(d, (0, k), (b, 1))
+        lb = jnp.where(rows_b > j + k, colb / piv, 0.0)
+        d = d - lb * urow
+        return jax.lax.dynamic_update_slice(d, jnp.where(rows_b > j + k, lb, colb), (0, k))
+
+    return jax.lax.fori_loop(0, c2, dstep, dblk)
+
+
+def solve_below_strip(diag: jax.Array, strip: jax.Array, j: int) -> jax.Array:
+    """Multipliers of a below-diagonal ``(B, C2)`` strip: right-solve against
+    the factored diagonal strip.  Operand values equal the rank-1 sequence's
+    (pivot row ``j+k`` of ``diag`` is final by its iteration), so this is
+    bitwise-identical to eliminating column-by-column.  Shared kernel/mirror
+    code."""
+    b, c2 = strip.shape
+    cols_c2 = jax.lax.broadcasted_iota(jnp.int32, (1, c2), 1)
+
+    def bstep(k, st):
+        piv = jax.lax.dynamic_slice(diag, (j + k, k), (1, 1))
+        urow = jnp.where(cols_c2 > k, jax.lax.dynamic_slice(diag, (j + k, 0), (1, c2)), 0.0)
+        colb = jax.lax.dynamic_slice(st, (0, k), (b, 1))
+        lb = colb / piv  # every row is below the pivot here
+        st = st - lb * urow
+        return jax.lax.dynamic_update_slice(st, lb, (0, k))
+
+    return jax.lax.fori_loop(0, c2, bstep, strip)
+
+
+def fused_block_size(n: int, block: int, *, vmem_budget_bytes: int = 12 * 2**20) -> int:
+    """Effective block size of the fused LU driver for an (n, n) matrix.
+
+    Shared by the megakernel and its mirror (same reasons as
+    :func:`sub_block_width`).  Two adjustments over ``min(block, n)``:
+
+    * **padding**: the fused driver pads n up to ``S·B``; for n just above a
+      block multiple (n=257, block=256) that nearly doubles the matrix.  At
+      the same step count ``S``, ``B = ceil(n/S)`` rounded up to a 32
+      multiple gives minimal padding — pick whichever candidate pads less.
+    * **VMEM**: the kernel holds three (N, B) fp32 scratch slabs; halve B
+      until they fit the budget so the default path compiles on real TPUs
+      for large n (e.g. n=8000 → B=128) instead of overflowing VMEM.
+    """
+    B = min(block, n)
+    S = -(-n // B)
+    balanced = min(block, -(-(-(-n // S)) // 32) * 32)  # ceil(n/S) up to a 32-multiple
+    if balanced >= 32 and -(-n // balanced) * balanced < S * B:
+        B = balanced
+    while B > 32 and 3 * (-(-n // B) * B) * B * 4 > vmem_budget_bytes:
+        B = max(32, B // 2)
+    return B
 
 
 def panel_factor(panel: jax.Array) -> jax.Array:
@@ -58,6 +169,79 @@ def blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
             l21 = panel[b:]
             a = a.at[k0 + b :, k0 + b :].add(-(l21 @ u12))
     return a
+
+
+def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
+    """Pure-jnp mirror of the single-dispatch Pallas megakernel
+    (:func:`repro.kernels.ebv_lu.lu_fused`) — op-for-op identical shapes and
+    ordering, so the two produce bitwise-identical packed LU factors.
+
+    Structure per step ``s`` (matrix padded to ``S·B`` with an inert identity
+    tail): two-level panel factorization (``C2``-wide strip rank-1 loop, strip
+    trsm, rank-``C2`` GEMM retirement per (B, C2) row block), then per
+    trailing block-column tile a two-level unit-lower trsm and the rank-``B``
+    trailing GEMM per row block.  This is also the fast ``impl="xla"`` path:
+    O(B/C2) passes over each slab instead of the O(B) passes of
+    :func:`blocked_lu`."""
+    n = a.shape[-1]
+    B = fused_block_size(n, block)
+    S = -(-n // B)
+    N = S * B
+    C2 = sub_block_width(B)
+    a = pad_identity_tail(a, N)
+    for s in range(S):
+        base = s * B
+        # ---- panel: two-level factorization of the column slab
+        for j in range(0, B, C2):
+            r0 = base + j
+            w = B - j - C2
+
+            # (1) bi-vectorized factorization of the diagonal-block strip
+            diag = factor_diag_strip(a[base : base + B, r0 : r0 + C2], j)
+            a = a.at[base : base + B, r0 : r0 + C2].set(diag)
+
+            # (2) unit-lower trsm: U rows of the strip vs the remaining cols
+            if w:
+                u = strip_trsm(diag[j : j + C2, :], a[r0 : r0 + C2, r0 + C2 : base + B])
+                a = a.at[r0 : r0 + C2, r0 + C2 : base + B].set(u)
+                lpart = diag[j + C2 :, :]
+                blk = a[r0 + C2 : base + B, r0 + C2 : base + B]
+                a = a.at[r0 + C2 : base + B, r0 + C2 : base + B].set(
+                    blk - jnp.dot(lpart, u, preferred_element_type=jnp.float32)
+                )
+
+            # (3) row blocks below: right-solve multipliers + GEMM retirement
+            for r in range(s + 1, S):
+                off = r * B
+                strip = solve_below_strip(diag, a[off : off + B, r0 : r0 + C2], j)
+                a = a.at[off : off + B, r0 : r0 + C2].set(strip)
+                if w:
+                    blkr = a[off : off + B, r0 + C2 : base + B]
+                    a = a.at[off : off + B, r0 + C2 : base + B].set(
+                        blkr - jnp.dot(strip, u, preferred_element_type=jnp.float32)
+                    )
+        # ---- trailing tiles: two-level trsm + rank-B update per row block
+        for t in range(s + 1, S):
+            tb = t * B
+            y = a[base : base + B, tb : tb + B]
+            for j in range(0, B, C2):
+                r0 = base + j
+                strip = strip_trsm(a[r0 : r0 + C2, r0 : r0 + C2], y[j : j + C2, :])
+                y = jax.lax.dynamic_update_slice(y, strip, (j, 0))
+                w = B - j - C2
+                if w:
+                    lpart = a[r0 + C2 : base + B, r0 : r0 + C2]
+                    tail = y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                    y = jax.lax.dynamic_update_slice(y, tail, (j + C2, 0))
+            a = a.at[base : base + B, tb : tb + B].set(y)
+            for r in range(s + 1, S):
+                off = r * B
+                lblk = a[off : off + B, base : base + B]
+                blk = a[off : off + B, tb : tb + B]
+                a = a.at[off : off + B, tb : tb + B].set(
+                    blk - jnp.dot(lblk, y, preferred_element_type=jnp.float32)
+                )
+    return a[:n, :n] if N != n else a
 
 
 def cyclic_owners(num_blocks: int, num_executors: int) -> list[int]:

@@ -37,6 +37,8 @@ __all__ = [
     "equalized_pairing",
     "pair_lengths",
     "fold_index",
+    "equalized_tile_schedule",
+    "tile_schedule_work",
     "unpack_lu",
     "reconstruct",
 ]
@@ -84,6 +86,32 @@ def fold_index(i, count):
     return jnp.where(from_front, half, count - half) if not isinstance(i, int) else (
         half if from_front else count - half
     )
+
+
+def equalized_tile_schedule(num_steps: int) -> list[tuple[int, ...]]:
+    """Equalized owner schedule for the blocked single-dispatch LU driver.
+
+    Block column ``t`` (``1 <= t <= num_steps-1``) is a *trailing tile* during
+    steps ``s < t``, so its lifetime work (trsm + rank-b update passes) is
+    proportional to ``t``.  Folding tile ``1+r`` with tile ``num_steps-1-r``
+    (paper eq. 7 with tiles in place of vectors) gives every program a
+    (long-lived, short-lived) tile pair with equal total lifetime work
+    ``num_steps``.  Returns, per program, the tuple of owned tile indices;
+    with an odd tile count the middle tile forms a singleton unit.
+
+    The fused Pallas kernel realizes exactly this map as
+    ``t1 = p + 1, t2 = num_steps - 1 - p`` for program ``p``.
+    """
+    return [
+        tuple(sorted(num_steps - 1 - r for r in unit))
+        for unit in equalized_pairing(num_steps)
+    ]
+
+
+def tile_schedule_work(num_steps: int) -> list[int]:
+    """Lifetime work (total trailing-tile step count) per program of
+    :func:`equalized_tile_schedule` — equals :func:`pair_lengths`."""
+    return [sum(unit) for unit in equalized_tile_schedule(num_steps)]
 
 
 def ebv_step(a: jax.Array, k, *, row_index=None) -> jax.Array:

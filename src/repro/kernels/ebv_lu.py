@@ -1,7 +1,23 @@
 """Pallas TPU kernels for EbV LU factorization.
 
-Three kernels, mirroring DESIGN.md §2's GPU→TPU adaptation:
+Kernels, mirroring DESIGN.md §2's GPU→TPU adaptation:
 
+* :func:`lu_fused`      — **single-dispatch blocked EbV LU megakernel**: one
+                          ``pallas_call`` for the whole factorization.  The
+                          packed matrix stays in HBM (``ANY`` memory space)
+                          and is carried *in place* via
+                          ``input_output_aliases``; the grid iterates
+                          (block-step × equalized tile program) and each
+                          program DMAs its panel/tiles through double-buffered
+                          VMEM scratch, fusing panel factorization, unit-lower
+                          trsm and the rank-b trailing update per step.
+                          Tile→program assignment is the paper's eq. 7 fold
+                          (:func:`repro.core.ebv.equalized_tile_schedule`):
+                          program ``p`` owns trailing tiles ``p+1`` and
+                          ``S-1-p`` whose lifetime work sums to the constant
+                          ``S``.  See ``src/repro/kernels/README.md`` for the
+                          launch-count / HBM-traffic math vs the legacy
+                          multi-launch driver.
 * :func:`lu_vmem`       — paper-faithful bi-vectorized LU with the whole
                           matrix VMEM-resident; every ``fori_loop`` step is a
                           fixed-shape masked rank-1 update (equal work/step).
@@ -24,8 +40,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["lu_vmem", "panel", "fused_step", "update"]
+from repro.core.blocked import (
+    factor_diag_strip,
+    fused_block_size,
+    pad_identity_tail,
+    solve_below_strip,
+    strip_trsm,
+    sub_block_width,
+)
+
+__all__ = ["lu_fused", "lu_vmem", "panel", "fused_step", "update"]
 
 
 def _rows_cols(m: int, n: int):
@@ -152,6 +178,192 @@ def fused_step(
         ],
         interpret=interpret,
     )(pan, a_top, a_trail)
+
+
+def _fused_lu_kernel(a_any, o_any, panel_buf, tile1_buf, tile2_buf, sems, *, num_steps: int, block: int):
+    """One (step ``s``, program ``p``) grid point of the single-dispatch LU.
+
+    Grid iteration on TPU is sequential with the last axis fastest, so within
+    a step program 0 factorizes the panel first and every program of that step
+    then consumes it from the persistent ``panel_buf`` scratch.  The matrix
+    itself never moves through the pipeline: it stays in HBM (``o_any`` is
+    aliased to the input) and only (N, B) column slabs are DMA'd to VMEM.
+
+    Panel factorization and trsm are two-level blocked: sequential masked
+    axpys are confined to ``C2``-wide strips and everything beyond the strip
+    is retired by rank-``C2`` GEMMs — O(B/C2) instead of O(B) passes over the
+    slab, which is what makes the megakernel decisively faster than the
+    multi-launch driver even at equal FLOPs.
+    """
+    del a_any  # aliased to o_any; all traffic goes through the output ref
+    s = pl.program_id(0)
+    p = pl.program_id(1)
+    S, B = num_steps, block
+    N = S * B
+    C2 = sub_block_width(B)  # shared with the pure-jnp mirror (bitwise twin)
+
+    def copy_live_rows(buf, sem, src_cols, to_hbm):
+        """DMA a column slab one (B, B) row block at a time, rows ``s*B``
+        down only — rows above the current step hold final U values and
+        never move."""
+
+        def blk_copy(r, _):
+            hbm = o_any.at[pl.ds(r * B, B), pl.ds(src_cols, B)]
+            vmem = buf.at[pl.ds(r * B, B), :]
+            dma = pltpu.make_async_copy(*((vmem, hbm) if to_hbm else (hbm, vmem)), sem)
+            dma.start()
+            dma.wait()
+            return 0
+
+        jax.lax.fori_loop(s, S, blk_copy, 0)
+
+    @pl.when(p == 0)
+    def _factor_panel():
+        copy_live_rows(panel_buf, sems.at[0], s * B, to_hbm=False)
+        base = s * B
+
+        # All sequential recurrences run on small array carries through the
+        # shared core.blocked strip helpers (the pure-jnp mirror traces the
+        # same jaxprs — bitwise equality by construction) and write scratch
+        # back once per strip: interpret-mode ref writes copy the whole
+        # scratch buffer, and on TPU fewer, larger stores pipeline better.
+        for j in range(0, B, C2):
+            # (1) bi-vectorized factorization of the diagonal-block strip
+            diag = factor_diag_strip(panel_buf[pl.ds(base, B), pl.ds(j, C2)], j)
+            panel_buf[pl.ds(base, B), pl.ds(j, C2)] = diag
+
+            # (2) unit-lower trsm: U rows of the strip vs the remaining cols
+            w = B - j - C2
+            if w:
+                u = strip_trsm(diag[j : j + C2, :], panel_buf[pl.ds(base + j, C2), pl.ds(j + C2, w)])
+                panel_buf[pl.ds(base + j, C2), pl.ds(j + C2, w)] = u
+                lpart = diag[j + C2 :, :]
+                blk = panel_buf[pl.ds(base + j + C2, w), pl.ds(j + C2, w)]
+                panel_buf[pl.ds(base + j + C2, w), pl.ds(j + C2, w)] = blk - jnp.dot(
+                    lpart, u, preferred_element_type=jnp.float32
+                )
+
+            # (3) row blocks below: multipliers via right-solve against the
+            # factored strip, then the rank-C2 GEMM retirement
+            def rblk(r, _):
+                off = r * B
+                strip = solve_below_strip(diag, panel_buf[pl.ds(off, B), pl.ds(j, C2)], j)
+                panel_buf[pl.ds(off, B), pl.ds(j, C2)] = strip
+                if w:
+                    blkr = panel_buf[pl.ds(off, B), pl.ds(j + C2, w)]
+                    panel_buf[pl.ds(off, B), pl.ds(j + C2, w)] = blkr - jnp.dot(
+                        strip, u, preferred_element_type=jnp.float32
+                    )
+                return 0
+
+            jax.lax.fori_loop(s + 1, S, rblk, 0)
+        copy_live_rows(panel_buf, sems.at[0], s * B, to_hbm=True)
+
+    if S == 1:
+        return  # no trailing tiles — the panel was the whole matrix
+
+    # Equalized fold (paper eq. 7 at tile granularity): program p owns the
+    # long-lived tile p+1 and the short-lived tile S-1-p; their lifetime work
+    # sums to the constant S (see core.ebv.equalized_tile_schedule).
+    t1 = p + 1
+    t2 = (S - 1) - p
+    act1 = t1 > s
+    act2 = jnp.logical_and(t2 > s, t2 != t1)
+
+    def tile_load(tbuf, sem, t):
+        return pltpu.make_async_copy(o_any.at[:, pl.ds(t * B, B)], tbuf, sem)
+
+    # Double buffering: both owned tiles start streaming in before the first
+    # is consumed, so tile t2's HBM→VMEM load overlaps tile t1's update.
+    @pl.when(act1)
+    def _():
+        tile_load(tile1_buf, sems.at[1], t1).start()
+
+    @pl.when(act2)
+    def _():
+        tile_load(tile2_buf, sems.at[2], t2).start()
+
+    def process(tbuf, sem, t):
+        tile_load(tbuf, sem, t).wait()
+        base = s * B
+
+        # Unit-lower trsm of the U12 tile, two-level: per C2-strip a short
+        # sequential axpy solve, then one rank-C2 GEMM retires the strip —
+        # all on a (B, B) array carry, written back to scratch once.
+        y = tbuf[pl.ds(base, B), :]
+        for j in range(0, B, C2):
+            ldiag = panel_buf[pl.ds(base + j, C2), pl.ds(j, C2)]
+            strip = strip_trsm(ldiag, y[j : j + C2, :])
+            y = jax.lax.dynamic_update_slice(y, strip, (j, 0))
+            w = B - j - C2
+            if w:
+                lpart = panel_buf[pl.ds(base + j + C2, w), pl.ds(j, C2)]
+                tail = y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                y = jax.lax.dynamic_update_slice(y, tail, (j + C2, 0))
+        tbuf[pl.ds(base, B), :] = y  # U12 tile
+
+        def row_body(r, _):
+            off = r * B
+            blk = tbuf[pl.ds(off, B), :]
+            lblk = panel_buf[pl.ds(off, B), :]  # L21 row block of this step
+            tbuf[pl.ds(off, B), :] = blk - jnp.dot(
+                lblk, y, preferred_element_type=jnp.float32
+            ).astype(blk.dtype)
+            return 0
+
+        jax.lax.fori_loop(s + 1, S, row_body, 0)
+        # Writeback moves live rows only — rows above s*B are final U values
+        # the kernel never touched (the load stays one full-slab async copy
+        # so the second owned tile's stream can overlap the first's update).
+        copy_live_rows(tbuf, sem, t * B, to_hbm=True)
+
+    @pl.when(act1)
+    def _():
+        process(tile1_buf, sems.at[1], t1)
+
+    @pl.when(act2)
+    def _():
+        process(tile2_buf, sems.at[2], t2)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -> jax.Array:
+    """Single-dispatch blocked EbV LU: the whole factorization in ONE
+    ``pallas_call``.
+
+    The matrix is padded to a multiple of ``block`` with an identity tail
+    (inert under no-pivot elimination), kept in HBM for the whole kernel and
+    mutated in place through ``input_output_aliases`` — no functional
+    ``a.at[...].set`` copies and no per-block-column dispatches remain.
+    VMEM footprint is 3·N·B floats (one panel slab + two double-buffered tile
+    slabs), independent of the matrix being square-resident.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    n = a.shape[-1]
+    if a.dtype != jnp.float32:
+        raise TypeError(f"lu_fused supports float32 only, got {a.dtype}")
+    B = fused_block_size(n, block)  # padding- and VMEM-aware; mirror uses it too
+    S = -(-n // B)
+    N = S * B
+    a = pad_identity_tail(a, N)
+    num_programs = max(1, S // 2)
+    out = pl.pallas_call(
+        functools.partial(_fused_lu_kernel, num_steps=S, block=B),
+        grid=(S, num_programs),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        out_shape=jax.ShapeDtypeStruct((N, N), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((N, B), jnp.float32),
+            pltpu.VMEM((N, B), jnp.float32),
+            pltpu.VMEM((N, B), jnp.float32),
+            pltpu.SemaphoreType.DMA((3,)),
+        ],
+        input_output_aliases={0: 0},
+        interpret=interpret,
+    )(a)
+    return out[:n, :n] if N != n else out
 
 
 def _update_kernel(l_ref, u_ref, c_ref, o_ref):

@@ -1,10 +1,26 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-``impl`` dispatch:
+``lu`` impl dispatch:
+  * ``"pallas_fused"``   — DEFAULT: single-dispatch EbV LU megakernel — one
+                           ``pallas_call`` for the whole factorization, matrix
+                           carried in place in HBM (see
+                           :func:`repro.kernels.ebv_lu.lu_fused`).  Falls back
+                           to ``"pallas_blocked"`` for non-float32 dtypes.
+  * ``"pallas_blocked"`` — legacy multi-launch blocked driver: one panel
+                           kernel + one fused bi-vector step kernel per block
+                           column (kept as the fallback/baseline; see
+                           README.md for the launch/traffic comparison).
   * ``"pallas_vmem"``    — whole-matrix VMEM kernel (n ≲ 4096 fp32).
-  * ``"pallas_blocked"`` — blocked driver: panel kernel + fused bi-vector
-                           step kernel per block column (rank-k updates).
-  * ``"xla"``            — the pure-jnp blocked path from :mod:`repro.core`.
+  * ``"xla"``            — pure-jnp mirror of the fused driver
+                           (:func:`repro.core.blocked.fused_blocked_lu`):
+                           identical op shapes/ordering, bitwise-identical
+                           output — the transparent reference.
+
+``lu_solve`` impl dispatch:
+  * ``"pallas"``         — DEFAULT: auto — ``solve_vmem`` while the packed LU
+                           fits VMEM comfortably, ``solve_tiled`` beyond.
+  * ``"pallas_vmem"`` / ``"pallas_tiled"`` — force either driver.
+  * ``"xla"``            — pure-jnp substitution from :mod:`repro.core`.
 
 On CPU (this container) the Pallas paths run in interpret mode automatically;
 on TPU they lower to Mosaic.
@@ -25,6 +41,10 @@ from . import banded as _kbanded
 
 __all__ = ["lu", "lu_solve", "linear_solve", "banded_lu"]
 
+# Above this order the packed (n, n) LU no longer comfortably shares VMEM
+# with an RHS tile, so the auto solve dispatch switches to the tiled driver.
+_SOLVE_VMEM_MAX_N = 2048
+
 
 def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bool | None) -> jax.Array:
     n = a.shape[-1]
@@ -36,14 +56,24 @@ def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bo
         w = n - k0 - b
         if w > 0:
             ct = min(col_tile, w)
-            while w % ct:
-                ct //= 2
-            u12, trail = _k.fused_step(
-                pan, a[k0 : k0 + b, k0 + b :], a[k0 + b :, k0 + b :],
-                col_tile=ct, interpret=interpret,
-            )
+            if w % ct:
+                # Pad the trailing width to the next tile multiple (tiles
+                # capped at 128 lanes) instead of halving the tile — odd
+                # widths used to degrade to 1-column tiles.  Zero columns are
+                # inert through trsm and the rank-b update.
+                ct = min(col_tile, 128)
+                wp = -(-w // ct) * ct
+                top = jnp.pad(a[k0 : k0 + b, k0 + b :], ((0, 0), (0, wp - w)))
+                trail = jnp.pad(a[k0 + b :, k0 + b :], ((0, 0), (0, wp - w)))
+                u12, new_trail = _k.fused_step(pan, top, trail, col_tile=ct, interpret=interpret)
+                u12, new_trail = u12[:, :w], new_trail[:, :w]
+            else:
+                u12, new_trail = _k.fused_step(
+                    pan, a[k0 : k0 + b, k0 + b :], a[k0 + b :, k0 + b :],
+                    col_tile=ct, interpret=interpret,
+                )
             a = a.at[k0 : k0 + b, k0 + b :].set(u12)
-            a = a.at[k0 + b :, k0 + b :].set(trail)
+            a = a.at[k0 + b :, k0 + b :].set(new_trail)
     return a
 
 
@@ -51,32 +81,51 @@ def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bo
 def lu(
     a: jax.Array,
     *,
-    impl: str = "pallas_blocked",
+    impl: str = "pallas_fused",
     block: int = 256,
     col_tile: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Packed EbV LU factorization (no pivoting — paper contract)."""
+    if impl == "pallas_fused":
+        if a.dtype == jnp.float32:
+            return _k.lu_fused(a, block=block, interpret=interpret)
+        impl = "pallas_blocked"  # fused kernel is fp32-only; fall back
     if impl == "pallas_vmem":
         return _k.lu_vmem(a, interpret=interpret)
     if impl == "pallas_blocked":
         return _pallas_blocked_lu(a, block=block, col_tile=col_tile, interpret=interpret)
     if impl == "xla":
-        return _core_blocked.blocked_lu(a, block=block)
+        return _core_blocked.fused_blocked_lu(a, block=block)
     raise ValueError(f"unknown impl {impl!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "interpret"))
-def lu_solve(lu_packed: jax.Array, b: jax.Array, *, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("impl", "block", "rhs_tile", "interpret"))
+def lu_solve(
+    lu_packed: jax.Array,
+    b: jax.Array,
+    *,
+    impl: str = "pallas",
+    block: int = 256,
+    rhs_tile: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    n = lu_packed.shape[-1]
     if impl == "pallas":
-        return _trsm.solve_vmem(lu_packed, b, interpret=interpret)
+        impl = "pallas_vmem" if n <= _SOLVE_VMEM_MAX_N else "pallas_tiled"
+    if impl == "pallas_vmem":
+        return _trsm.solve_vmem(lu_packed, b, rhs_tile=rhs_tile, interpret=interpret)
+    if impl == "pallas_tiled":
+        return _trsm.solve_tiled(lu_packed, b, block=block, rhs_tile=rhs_tile, interpret=interpret)
     if impl == "xla":
         return _core_solve.lu_solve(lu_packed, b)
     raise ValueError(f"unknown impl {impl!r}")
 
 
 def linear_solve(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
-    return lu_solve(lu(a, **{k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}), b)
+    lu_kw = {k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}
+    solve_kw = {k: v for k, v in kw.items() if k in ("block", "rhs_tile", "interpret")}
+    return lu_solve(lu(a, **lu_kw), b, **solve_kw)
 
 
 @functools.partial(jax.jit, static_argnames=("bw", "impl", "interpret"))

@@ -2,8 +2,22 @@
 
 Column-oriented vectorized substitution: once pivot ``k`` resolves, one
 masked axpy retires its contribution from every remaining row — the solve
-phase analogue of the bi-vectorized elimination step.  The RHS block is
-tiled over the grid; the packed LU stays VMEM-resident per program.
+phase analogue of the bi-vectorized elimination step.
+
+Two drivers:
+
+* :func:`solve_vmem`  — the packed LU stays VMEM-resident per program and the
+                        RHS block is tiled over the grid.  Simple and fast
+                        while ``(n, n)`` fits in VMEM (n ≲ 4096 fp32).
+* :func:`solve_tiled` — blocked substitution that never materializes the
+                        whole LU on-chip: the factor stays in HBM (``ANY``
+                        memory space) and only one ``(block, block)`` tile is
+                        DMA'd to VMEM scratch at a time, so solves scale past
+                        the VMEM wall.  Forward phase walks diagonal blocks
+                        left→right (unit-lower tile solve, then one GEMM per
+                        lower off-diagonal tile); backward phase mirrors it
+                        right→left against U.  VMEM footprint per program:
+                        ``N·rhs_tile + block²`` floats.
 """
 from __future__ import annotations
 
@@ -12,8 +26,12 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["solve_vmem"]
+from repro.core.blocked import pad_identity_tail as _pad_identity_tail
+from repro.core.blocked import strip_trsm as _strip_trsm
+
+__all__ = ["solve_vmem", "solve_tiled"]
 
 
 def _solve_kernel(lu_ref, b_ref, x_ref, *, n: int):
@@ -44,23 +62,148 @@ def solve_vmem(
     lu: jax.Array, b: jax.Array, *, rhs_tile: int = 256, interpret: bool | None = None
 ) -> jax.Array:
     """Solve ``(LU) x = b`` for packed ``lu`` (n, n) and RHS ``b`` (n,) or
-    (n, m); the RHS columns are tiled across the grid."""
+    (n, m); the RHS columns are tiled across the grid.  RHS widths that do
+    not divide ``rhs_tile`` are zero-padded to the next tile multiple and
+    sliced back (zero columns solve to zero, so padding is inert)."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     squeeze = b.ndim == 1
     bm = b[:, None] if squeeze else b
     n, m = bm.shape
     rt = min(rhs_tile, m)
-    assert m % rt == 0, (m, rt)
+    m_pad = -(-m // rt) * rt
+    if m_pad != m:
+        bm = jnp.pad(bm, ((0, 0), (0, m_pad - m)))
     x = pl.pallas_call(
         functools.partial(_solve_kernel, n=n),
-        grid=(m // rt,),
+        grid=(m_pad // rt,),
         in_specs=[
             pl.BlockSpec((n, n), lambda j: (0, 0)),
             pl.BlockSpec((n, rt), lambda j: (0, j)),
         ],
         out_specs=pl.BlockSpec((n, rt), lambda j: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((n, m), bm.dtype),
+        out_shape=jax.ShapeDtypeStruct((n, m_pad), bm.dtype),
         interpret=interpret,
     )(lu, bm)
+    x = x[:, :m] if m_pad != m else x
+    return x[:, 0] if squeeze else x
+
+
+def _solve_tiled_kernel(lu_any, b_ref, x_ref, ltile, sem, *, num_steps: int, block: int):
+    """One RHS tile program: blocked forward then backward substitution with
+    the LU factor streamed tile-by-tile from HBM."""
+    S, B = num_steps, block
+    rt = b_ref.shape[1]
+    x_ref[...] = b_ref[...]
+    rows_b = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+    acc_dtype = jnp.promote_types(jnp.float32, b_ref.dtype)  # f32, or f64 under x64
+
+    def load(i, j):
+        dma = pltpu.make_async_copy(
+            lu_any.at[pl.ds(i * B, B), pl.ds(j * B, B)], ltile, sem
+        )
+        dma.start()
+        dma.wait()
+
+    def fwd_outer(i, _):
+        load(i, i)
+        yi = _strip_trsm(ltile[...], x_ref[pl.ds(i * B, B), :])
+        x_ref[pl.ds(i * B, B), :] = yi
+
+        def off(r, _):
+            load(r, i)
+            blk = x_ref[pl.ds(r * B, B), :]
+            x_ref[pl.ds(r * B, B), :] = blk - jnp.dot(
+                ltile[...], yi, preferred_element_type=acc_dtype
+            ).astype(blk.dtype)
+            return 0
+
+        jax.lax.fori_loop(i + 1, S, off, 0)
+        return 0
+
+    jax.lax.fori_loop(0, S, fwd_outer, 0)
+
+    def bwd_outer(jj, _):
+        i = (S - 1) - jj
+        load(i, i)
+        u11 = ltile[...]
+        xi = x_ref[pl.ds(i * B, B), :]
+
+        def bwd_in(kk, x):
+            k = (B - 1) - kk
+            pivot = jax.lax.dynamic_slice(u11, (k, k), (1, 1))
+            xk = jax.lax.dynamic_slice(x, (k, 0), (1, rt)) / pivot
+            x = jax.lax.dynamic_update_slice(x, xk, (k, 0))
+            uk = jnp.where(rows_b < k, jax.lax.dynamic_slice(u11, (0, k), (B, 1)), 0.0)
+            return x - uk * xk
+
+        xi = jax.lax.fori_loop(0, B, bwd_in, xi)
+        x_ref[pl.ds(i * B, B), :] = xi
+
+        def off(r, _):
+            load(r, i)
+            blk = x_ref[pl.ds(r * B, B), :]
+            x_ref[pl.ds(r * B, B), :] = blk - jnp.dot(
+                ltile[...], xi, preferred_element_type=acc_dtype
+            ).astype(blk.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, i, off, 0)
+        return 0
+
+    jax.lax.fori_loop(0, S, bwd_outer, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "rhs_tile", "interpret"))
+def solve_tiled(
+    lu: jax.Array,
+    b: jax.Array,
+    *,
+    block: int = 256,
+    rhs_tile: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked ``(LU) x = b`` solve with the factor HBM-resident.
+
+    Pads ``n`` to a multiple of ``block`` with an identity tail (inert: unit
+    diagonal, zero coupling) and the RHS with zero rows/columns, then runs one
+    program per RHS column tile.  Only one ``(block, block)`` LU tile is
+    on-chip at a time, so the solve scales to matrices far past what
+    :func:`solve_vmem` can hold (~4096² fp32)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    squeeze = b.ndim == 1
+    bm = b[:, None] if squeeze else b
+    out_dtype = bm.dtype
+    # substitution runs at (at least) f32: lower-precision factors/RHS are
+    # solved in f32 and cast back (more accurate than bf16 math); f64 inputs
+    # keep f64 scratch and full accuracy
+    compute_dtype = jnp.promote_types(jnp.float32, jnp.promote_types(lu.dtype, out_dtype))
+    lu = lu.astype(compute_dtype)
+    bm = bm.astype(compute_dtype)
+    n, m = bm.shape
+    B = min(block, n)
+    S = -(-n // B)
+    N = S * B
+    rt = min(rhs_tile, m)
+    M = -(-m // rt) * rt
+    lu = _pad_identity_tail(lu, N)
+    if (N, M) != (n, m):
+        bm = jnp.pad(bm, ((0, N - n), (0, M - m)))
+    x = pl.pallas_call(
+        functools.partial(_solve_tiled_kernel, num_steps=S, block=B),
+        grid=(M // rt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((N, rt), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((N, rt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), bm.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, B), compute_dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(lu, bm)
+    x = x[:n, :m].astype(out_dtype)
     return x[:, 0] if squeeze else x

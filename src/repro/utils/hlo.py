@@ -180,6 +180,26 @@ def op_histogram(hlo_text: str, ops=("fusion", "custom-call", "while", "dot", "c
     return dict(hist)
 
 
+def primitive_count(jaxpr, name: str) -> int:
+    """Count occurrences of primitive ``name`` in a (closed) jaxpr, recursing
+    into sub-jaxprs (cond/scan/while/pjit bodies).  Used to assert dispatch
+    counts — e.g. the single-dispatch LU driver must trace to exactly one
+    ``pallas_call``."""
+    from jax.core import Jaxpr, ClosedJaxpr  # local: keep module import-light
+
+    if isinstance(jaxpr, ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == name:
+            count += 1
+        for v in eqn.params.values():
+            for sub in v if isinstance(v, (list, tuple)) else (v,):
+                if isinstance(sub, (Jaxpr, ClosedJaxpr)):
+                    count += primitive_count(sub, name)
+    return count
+
+
 def cost_analysis_dict(compiled) -> dict:
     """jax-version-portable ``Compiled.cost_analysis()``: newer jax returns a
     flat dict, older releases a one-element list of dicts (per device

@@ -1,0 +1,212 @@
+"""Single-dispatch fused EbV LU driver: correctness, dispatch-count and
+equalized-schedule properties (ISSUE 2 acceptance criteria)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_diagonally_dominant
+from repro.core.blocked import blocked_lu, fused_blocked_lu, sub_block_width
+from repro.core.ebv import (
+    equalized_pairing,
+    equalized_tile_schedule,
+    pair_lengths,
+    reconstruct,
+    tile_schedule_work,
+)
+from repro.kernels import ops, ref
+from repro.kernels.ebv_lu import lu_fused
+from repro.kernels.trsm import solve_tiled, solve_vmem
+from repro.utils.hlo import primitive_count
+
+
+# ---------------------------------------------------------------------------
+# equivalence: fused kernel vs its pure-jnp mirror (bitwise) and oracles
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [64, 257, 1024])
+def test_fused_bitwise_identical_to_xla(n):
+    """Acceptance: bitwise-identical packed LU vs impl="xla" in interpret
+    mode for n in {64, 257, 1024}."""
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    got = np.asarray(ops.lu(a, impl="pallas_fused"))
+    want = np.asarray(ops.lu(a, impl="xla"))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize(
+    "n,block",
+    [
+        (40, 64),   # n < block
+        (63, 32),   # odd, non-divisible
+        (97, 32),   # prime
+        (131, 64),  # prime > block
+        (257, 64),  # prime, multi-step with padded tail
+        (256, 64),  # exact multiple
+    ],
+)
+def test_fused_nondivisible_sweep(n, block):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + block), n)
+    got = np.asarray(lu_fused(a, block=block))
+    want = np.asarray(fused_blocked_lu(a, block=block))
+    np.testing.assert_array_equal(got, want)
+    oracle = ref.lu_ref(np.asarray(a, np.float64))
+    np.testing.assert_allclose(got, oracle, atol=5e-5 * n)
+
+
+@pytest.mark.parametrize("n,block", [(96, 32), (200, 64)])
+def test_fused_reconstruct(n, block):
+    """scipy-style check: L @ U (packed, unit-lower implicit) rebuilds A."""
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    lu = ops.lu(a, impl="pallas_fused", block=block)
+    rebuilt = np.asarray(reconstruct(lu), np.float64)
+    np.testing.assert_allclose(rebuilt, np.asarray(a, np.float64), atol=1e-3)
+
+
+def test_fused_legacy_drivers_agree():
+    """The legacy multi-launch drivers stay consistent with the fused one to
+    factorization tolerance (their rank-1 ordering differs in last bits)."""
+    n = 128
+    a = make_diagonally_dominant(jax.random.PRNGKey(11), n)
+    lu_f = np.asarray(ops.lu(a, impl="pallas_fused", block=32))
+    lu_b = np.asarray(ops.lu(a, impl="pallas_blocked", block=32, col_tile=32))
+    lu_legacy = np.asarray(blocked_lu(a, block=32))
+    np.testing.assert_allclose(lu_f, lu_b, atol=2e-3)
+    np.testing.assert_allclose(lu_f, lu_legacy, atol=2e-3)
+
+
+def test_fused_is_default_impl():
+    a = make_diagonally_dominant(jax.random.PRNGKey(3), 96)
+    np.testing.assert_array_equal(
+        np.asarray(ops.lu(a, block=32)), np.asarray(ops.lu(a, impl="pallas_fused", block=32))
+    )
+
+
+def test_fused_bf16_falls_back():
+    a = make_diagonally_dominant(jax.random.PRNGKey(4), 64, dtype=jnp.bfloat16)
+    out = ops.lu(a, block=32, col_tile=32)  # must not raise; blocked fallback
+    assert out.dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+# ---------------------------------------------------------------------------
+# dispatch count: the whole factorization is ONE pallas_call
+# ---------------------------------------------------------------------------
+def test_fused_single_dispatch():
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), 256)
+    jaxpr = jax.make_jaxpr(lambda x: ops.lu(x, impl="pallas_fused", block=64))(a)
+    assert primitive_count(jaxpr, "pallas_call") == 1
+    # the legacy driver dispatches per block column (2S-1 launches)
+    jaxpr_b = jax.make_jaxpr(lambda x: ops.lu(x, impl="pallas_blocked", block=64))(a)
+    assert primitive_count(jaxpr_b, "pallas_call") == 7
+
+
+# ---------------------------------------------------------------------------
+# equalized fold schedule properties (paper eq. 7 at tile granularity)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("num_steps", [2, 3, 4, 5, 8, 9, 16, 33])
+def test_tile_schedule_equal_work(num_steps):
+    sched = equalized_tile_schedule(num_steps)
+    work = tile_schedule_work(num_steps)
+    # per-program lifetime work totals match the paper's pair lengths ...
+    assert work == pair_lengths(num_steps)
+    # ... which are all equal (to num_steps) except a possible middle singleton
+    full = [w for unit, w in zip(sched, work) if len(unit) == 2]
+    assert all(w == num_steps for w in full)
+    assert sum(len(u) == 1 for u in sched) <= 1
+    # every trailing tile is owned exactly once
+    owned = sorted(t for unit in sched for t in unit)
+    assert owned == list(range(1, num_steps))
+    # and the kernel's closed-form (p+1, S-1-p) map realizes the schedule
+    for p, unit in enumerate(sched):
+        assert set(unit) == {p + 1, num_steps - 1 - p}
+
+
+def test_tile_schedule_matches_pairing():
+    for num_steps in range(2, 20):
+        pairing = equalized_pairing(num_steps)
+        sched = equalized_tile_schedule(num_steps)
+        assert len(sched) == len(pairing)
+
+
+def test_sub_block_width_divides():
+    for b in [8, 16, 24, 32, 40, 64, 97, 128, 256]:
+        assert b % sub_block_width(b) == 0
+
+
+# ---------------------------------------------------------------------------
+# solve phase: tiled driver + RHS-padding regression
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,m,block,rt", [(64, 8, 32, 8), (100, 7, 32, 4), (257, 33, 64, 16), (128, 1, 64, 8)])
+def test_solve_tiled_matches_xla(n, m, block, rt):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n + m), n)
+    lu = ops.lu(a, impl="xla", block=block)
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, m))
+    got = np.asarray(solve_tiled(lu, b, block=block, rhs_tile=rt))
+    want = ref.solve_ref(np.asarray(lu), np.asarray(b))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+    res = np.linalg.norm(np.asarray(a, np.float64) @ got - np.asarray(b)) / np.linalg.norm(np.asarray(b))
+    assert res < 1e-4
+
+
+def test_solve_tiled_1d_rhs():
+    n = 96
+    a = make_diagonally_dominant(jax.random.PRNGKey(5), n)
+    lu = ops.lu(a, impl="xla", block=32)
+    b = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    got = np.asarray(solve_tiled(lu, b, block=32))
+    assert got.shape == (n,)
+    want = ref.solve_ref(np.asarray(lu), np.asarray(b)[:, None])[:, 0]
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_solve_vmem_nondivisible_rhs():
+    """Regression: m=300 with rhs_tile=256 used to trip the divisibility
+    assert; now padded to the next tile multiple and sliced back."""
+    n = 64
+    a = make_diagonally_dominant(jax.random.PRNGKey(7), n)
+    lu = ops.lu(a, impl="xla", block=32)
+    b = jax.random.normal(jax.random.PRNGKey(8), (n, 300))
+    got = np.asarray(solve_vmem(lu, b, rhs_tile=256))
+    want = ref.solve_ref(np.asarray(lu), np.asarray(b))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+
+
+def test_solve_tiled_bf16():
+    """Regression: the tiled solve used to crash on bf16 (scan-carry dtype
+    promotion against the f32 scratch tile); it now solves in f32 and casts
+    back, so the bf16 pipeline survives the large-n auto-dispatch."""
+    n = 64
+    a = make_diagonally_dominant(jax.random.PRNGKey(12), n, dtype=jnp.bfloat16)
+    lu = ops.lu(a, block=32, col_tile=32)
+    b = jax.random.normal(jax.random.PRNGKey(13), (n, 4)).astype(jnp.bfloat16)
+    x = ops.lu_solve(lu, b, impl="pallas_tiled", block=32)
+    assert x.dtype == jnp.bfloat16
+    res = np.linalg.norm(
+        np.asarray(a, np.float64) @ np.asarray(x, np.float64) - np.asarray(b, np.float64)
+    ) / np.linalg.norm(np.asarray(b, np.float64))
+    assert res < 0.05
+
+
+def test_lu_solve_auto_dispatch_tiled():
+    """Above the VMEM threshold lu_solve routes to the tiled driver and the
+    whole pipeline still solves the system."""
+    n = 160
+    a = make_diagonally_dominant(jax.random.PRNGKey(9), n)
+    b = jax.random.normal(jax.random.PRNGKey(10), (n, 4))
+    lu = ops.lu(a, impl="pallas_fused", block=64)
+    x_tiled = np.asarray(ops.lu_solve(lu, b, impl="pallas_tiled", block=64))
+    x_vmem = np.asarray(ops.lu_solve(lu, b, impl="pallas_vmem"))
+    np.testing.assert_allclose(x_tiled, x_vmem, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# legacy blocked driver: odd-trailing-width padding regression
+# ---------------------------------------------------------------------------
+def test_blocked_driver_odd_width_padding():
+    """n=97/block=32 leaves a 65-wide trailing block; the driver used to
+    halve the column tile down to 1 — now it pads to the tile multiple."""
+    n = 97
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    got = np.asarray(ops.lu(a, impl="pallas_blocked", block=32, col_tile=32))
+    want = ref.lu_ref(np.asarray(a))
+    np.testing.assert_allclose(got, want, atol=5e-3)
