@@ -35,6 +35,28 @@ def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
+def time_shootout(fns: dict, *args, warmup: int = 1, iters: int = 5) -> dict[str, float]:
+    """Median wall seconds per call for several contenders, sampled
+    *round-robin* rather than back-to-back.
+
+    Sequential per-impl timing biases whichever contender runs first: on
+    this container the host visibly drifts (throttle recovery after a heavy
+    preceding section) on the ~100 ms scale, which put a systematic ~5%
+    penalty on the first-measured impl.  Interleaving spreads the drift
+    evenly across contenders so close races (e.g. the fused LU vs its
+    op-identical xla mirror) aren't decided by measurement order."""
+    for fn in fns.values():
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    samples: dict[str, list[float]] = {name: [] for name in fns}
+    for _ in range(iters):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            samples[name].append(time.perf_counter() - t0)
+    return {name: float(np.median(ts)) for name, ts in samples.items()}
+
+
 # ---------------------------------------------------------------------------
 # sequential scalar baselines (the paper's "CPU" column)
 # ---------------------------------------------------------------------------

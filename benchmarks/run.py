@@ -2,45 +2,77 @@
 
 Prints ``name,us_per_call,derived`` CSV (brief contract).  ``--full`` runs
 the paper's full matrix sizes (up to 16000); default sizes keep the suite
-CPU-friendly.  ``--smoke`` runs a fast CI subset (table2 at n=256 plus the
-LU kernel-impl shootout at n∈{256, 1024}) and writes ``BENCH_kernels.json``
+CPU-friendly.  ``--smoke`` runs a fast CI subset (table2 at n=256, the LU
+kernel-impl shootout at n∈{256, 1024}, and the banded kernel shootout at
+the paper's n=16384 / bw=16) and writes ``BENCH_kernels.json``
 (name → us_per_call) at the repo root, seeding the perf trajectory across
 PRs.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 import sys
 
 SMOKE_LU_SIZES = (256, 1024)
 SMOKE_LU_IMPLS = ("pallas_fused", "pallas_blocked", "xla")
+SMOKE_BANDED_N = 16384
+SMOKE_BANDED_BW = 16
+SMOKE_BANDED_IMPLS = ("pallas_blocked", "pallas_tiled", "pallas_scalar")
 
 
 def smoke(out_path: str | None = None) -> dict[str, float]:
-    """Fast perf smoke: table2 at small size + per-impl LU kernel timings.
+    """Fast perf smoke: table2 at small size + per-impl LU kernel timings +
+    the sparse (banded) trajectory at paper scale.
 
     Returns (and writes to ``out_path``) ``{name: us_per_call}``.  The
     ``lu_n1024_*`` entries are the tracked fused-vs-blocked wall-time
-    comparison."""
+    comparison; the ``banded_*`` entries track the blocked band megakernel
+    against the legacy scalar kernel and the sequential numpy baseline."""
+    import numpy as np
+
     import jax
 
     from repro.core import make_diagonally_dominant
+    from repro.core.banded import make_banded_dd
     from repro.kernels import ops as kops
     from . import table2_dense
-    from .common import emit, time_call
+    from .common import emit, numpy_banded_baseline, time_call, time_shootout
 
     rows_us: dict[str, float] = {}
     for name, secs in table2_dense.run(sizes=[256]).items():
         rows_us[name] = secs * 1e6
     for n in SMOKE_LU_SIZES:
         a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
-        for impl in SMOKE_LU_IMPLS:
-            fn = lambda a: kops.lu(a, impl=impl)
-            t = time_call(fn, a, iters=5)
+        # round-robin sampling: close races (fused vs its op-identical xla
+        # mirror) must not be decided by measurement order / host drift
+        fns = {impl: functools.partial(lambda impl, a: kops.lu(a, impl=impl), impl)
+               for impl in SMOKE_LU_IMPLS}
+        times = time_shootout(fns, a, iters=15 if n <= 256 else 5)
+        for impl, t in times.items():
             rows_us[f"lu_n{n}_{impl}"] = t * 1e6
             emit(f"lu_n{n}_{impl}", t)
+
+    nb, bw = SMOKE_BANDED_N, SMOKE_BANDED_BW
+    arow = make_banded_dd(jax.random.PRNGKey(0), nb, bw)
+    fns = {impl: functools.partial(lambda impl, a: kops.banded_lu(a, bw=bw, impl=impl), impl)
+           for impl in SMOKE_BANDED_IMPLS}
+    for impl, t in time_shootout(fns, arow, iters=5).items():
+        rows_us[f"banded_lu_n{nb}_{impl}"] = t * 1e6
+        emit(f"banded_lu_n{nb}_{impl}", t)
+    arow_np = np.asarray(arow, np.float64)
+    t = time_call(lambda: numpy_banded_baseline(arow_np, bw), warmup=0, iters=1)
+    rows_us[f"banded_lu_n{nb}_numpy"] = t * 1e6
+    emit(f"banded_lu_n{nb}_numpy", t)
+    lub = kops.banded_lu(arow, bw=bw)
+    b = jax.random.normal(jax.random.PRNGKey(1), (nb,))
+    fns = {impl: functools.partial(lambda impl, l, r: kops.banded_solve(l, r, bw=bw, impl=impl), impl)
+           for impl in ("pallas", "xla_scalar")}
+    for impl, t in time_shootout(fns, lub, b, iters=5).items():
+        rows_us[f"banded_solve_n{nb}_{impl}"] = t * 1e6
+        emit(f"banded_solve_n{nb}_{impl}", t)
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_kernels.json")
     with open(out_path, "w") as f:

@@ -13,4 +13,12 @@ cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke
+    # the smoke bench must land the sparse trajectory: banded_* rows present
+    python - <<'EOF'
+import json
+rows = json.load(open("BENCH_kernels.json"))
+banded = sorted(k for k in rows if k.startswith("banded_"))
+assert banded, "smoke bench wrote no banded_* rows to BENCH_kernels.json"
+print(f"banded rows present: {len(banded)} ({', '.join(banded)})")
+EOF
 fi

@@ -27,7 +27,17 @@ from .solve import (
     lu_solve,
     linear_solve,
 )
-from .banded import to_banded, from_banded, banded_lu, banded_solve, banded_lu_solve
+from .banded import (
+    to_banded,
+    from_banded,
+    banded_lu,
+    banded_solve,
+    banded_lu_solve,
+    banded_lu_blocked,
+    banded_solve_blocked,
+    banded_linear_solve_blocked,
+    make_banded_dd,
+)
 from .batched import batched_ebv_lu, batched_lu_solve, batched_linear_solve
 from .distributed import distributed_blocked_lu, distributed_lu_solve, placement_tables
 
@@ -37,6 +47,8 @@ __all__ = [
     "blocked_lu", "panel_factor", "ebv_folded_owners", "cyclic_owners",
     "forward_substitution", "backward_substitution", "lu_solve", "linear_solve",
     "to_banded", "from_banded", "banded_lu", "banded_solve", "banded_lu_solve",
+    "banded_lu_blocked", "banded_solve_blocked", "banded_linear_solve_blocked",
+    "make_banded_dd",
     "batched_ebv_lu", "batched_lu_solve", "batched_linear_solve",
     "distributed_blocked_lu", "distributed_lu_solve", "placement_tables",
 ]

@@ -8,6 +8,24 @@ bandwidth-``bw`` matrix every elimination bi-vector has length exactly
 Storage is row-aligned band form: ``arow[i, t] = A[i, i - bw + t]`` for
 ``t ∈ [0, 2bw]`` (zero outside the matrix).  Factorization costs
 O(n·bw²) instead of O(n³).
+
+Two realizations live here:
+
+* the scalar-sequential reference (:func:`banded_lu` / :func:`banded_solve`):
+  one ``fori_loop`` step per elimination row — the paper-faithful loop.
+* the **blocked** path (:func:`banded_lu_blocked` /
+  :func:`banded_solve_blocked`): ``C`` pivot rows retired per step through a
+  dense ``(C+bw, C+bw)`` working *window*.  The band is first re-laid into a
+  window-aligned skewed form (:func:`band_to_skewed`) in which every window
+  assembles from two static slices — no per-step gather/shear — and each
+  bi-vector elimination inside the window is confined to the ``(bw+1, bw+1)``
+  sub-block the band can reach (the paper's naturally-equalized unit: every
+  step identical shape and cost).  The window step collectively applies the
+  rank-``C`` Schur update to the ``(bw, bw)`` carry corner that flows into
+  the next step.  These pure-jnp drivers are the op-identical mirrors of the
+  Pallas kernels in :mod:`repro.kernels.banded` — both sides trace the same
+  window jaxprs, so their packed band factors are bitwise-identical (the
+  dense path's PR-2 contract, extended to the band).
 """
 from __future__ import annotations
 
@@ -17,12 +35,31 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .blocked import strip_trsm, strip_utrsm, sub_block_width
+
 __all__ = [
     "to_banded",
     "from_banded",
     "banded_lu",
     "banded_solve",
     "banded_lu_solve",
+    "make_banded_dd",
+    "band_block_size",
+    "pad_band_identity",
+    "band_to_skewed",
+    "skewed_to_band",
+    "skew_rows",
+    "skew_pad",
+    "band_window_from_slabs",
+    "factor_band_window",
+    "band_step_slabs",
+    "band_step_writeback",
+    "band_block_step",
+    "unit_lower_window_solve",
+    "upper_window_solve",
+    "banded_lu_blocked",
+    "banded_solve_blocked",
+    "banded_linear_solve_blocked",
 ]
 
 
@@ -118,3 +155,275 @@ def banded_solve(lu_band: jax.Array, b: jax.Array, *, bw: int) -> jax.Array:
 
 def banded_lu_solve(arow: jax.Array, b: jax.Array, *, bw: int) -> jax.Array:
     return banded_solve(banded_lu(arow, bw=bw), b, bw=bw)
+
+
+# ---------------------------------------------------------------------------
+# blocked band path — shared helpers (kernel/mirror bitwise twins)
+# ---------------------------------------------------------------------------
+def make_banded_dd(key, n: int, bw: int, dtype=jnp.float32) -> jax.Array:
+    """Diagonally-dominant row-aligned band factory, built directly in band
+    form — no dense ``(n, n)`` detour, so it scales to the paper's n=16384
+    (where the dense matrix alone would be 1 GB)."""
+    w = 2 * bw + 1
+    a = jax.random.uniform(key, (n, w), jnp.float32, minval=-1.0, maxval=1.0)
+    i = jnp.arange(n)[:, None]
+    t = jnp.arange(w)[None, :]
+    j = i - bw + t
+    a = jnp.where((j >= 0) & (j < n), a, 0.0)
+    offsum = jnp.sum(jnp.abs(a), axis=1) - jnp.abs(a[:, bw])
+    return a.at[:, bw].set(offsum + 1.0).astype(dtype)
+
+
+def band_block_size(n: int, bw: int, block: int | None = None) -> int:
+    """Pivot rows ``C`` retired per blocked band step.
+
+    ``C ≈ 8·bw`` (clamped to [32, 256]) amortizes the per-step window
+    assembly over many pivots while keeping the ``(C+bw)²`` dense window
+    small.  ``C ≥ bw`` is enforced so a step's ``bw`` carry rows never span
+    more than one following block (the skewed layout's contract); ``C ≤ n``
+    caps the degenerate bw ≥ n case at one step.  Shared by the Pallas
+    kernels and the pure-jnp mirrors so both sides block identically
+    (bitwise contract)."""
+    if block is None:
+        block = max(32, min(256, 8 * bw))
+    return min(max(block, bw), n)
+
+
+def pad_band_identity(arow: jax.Array, bw: int, rows_to: int) -> jax.Array:
+    """Pad the band with identity rows (centre diagonal 1, zero coupling) —
+    inert under no-pivot elimination and substitution, the band analogue of
+    :func:`repro.core.blocked.pad_identity_tail`."""
+    n, w = arow.shape
+    if rows_to == n:
+        return arow
+    pad = jnp.zeros((rows_to - n, w), arow.dtype).at[:, bw].set(1.0)
+    return jnp.concatenate([arow, pad], axis=0)
+
+
+def band_to_skewed(ap: jax.Array, bw: int, block: int) -> jax.Array:
+    """Re-lay the row-aligned band ``(R, 2bw+1)`` (``R`` a multiple of
+    ``block``) into the window-aligned skewed form ``G`` ``(R, C+2bw)``:
+    ``G[i, c] = A[i, k(i) - bw + c]`` with ``k(i) = (i // C)·C``.
+
+    In this layout the blocked drivers assemble every dense working window
+    from two *contiguous static slices* of ``G`` — the per-step gather that
+    a row-aligned shear would need never happens.  The skew itself is the
+    classic flat-reshape trick: shifting row ``r0`` of a block right by
+    ``r0`` is the identity on flattened indices once rows are padded to
+    width ``C+2bw+1``, so the whole conversion is one pad + two reshapes +
+    one slice.  Pure data movement (exact), so it never perturbs bitwise
+    comparisons."""
+    r, w = ap.shape
+    c = block
+    gw = c + 2 * bw
+    # rows padded to gw+1: flat index r0·(gw+1) + t  ==  r0·gw + (r0 + t),
+    # i.e. exactly the skewed row-of-gw layout.
+    padded = jnp.pad(ap.reshape(r // c, c, w), ((0, 0), (0, 0), (0, gw + 1 - w)))
+    flat = padded.reshape(r // c, c * (gw + 1))[:, : c * gw]
+    return flat.reshape(r, gw)
+
+
+def skewed_to_band(g: jax.Array, bw: int, block: int) -> jax.Array:
+    """Inverse of :func:`band_to_skewed`: skewed ``(R, C+2bw)`` → row-aligned
+    band ``(R, 2bw+1)`` (the same flat-reshape identity, run backwards)."""
+    r, gw = g.shape
+    c = block
+    w = 2 * bw + 1
+    flat = jnp.pad(g.reshape(r // c, c * gw), ((0, 0), (0, c)))
+    return flat.reshape(r // c, c, gw + 1)[:, :, :w].reshape(r, w)
+
+
+def band_window_from_slabs(own: jax.Array, carry: jax.Array, bw: int) -> jax.Array:
+    """Assemble the dense ``(C+bw, C+bw)`` working window of one block step
+    from its two skewed-layout slabs: ``own`` ``(C, C+2bw)`` (the step's own
+    rows) and ``carry`` (the next block's first ``bw`` rows — ``(bw, 2bw)``
+    when ``C ≥ bw``, ``(bw, C+bw)`` sliced at column ``bw-C`` otherwise)."""
+    c = own.shape[0]
+    top = own[:, bw:]  # window columns 0..C+bw-1 of the step's own rows
+    if c >= bw:
+        bot = jnp.concatenate([jnp.zeros((bw, c - bw), own.dtype), carry], axis=1)
+    else:
+        bot = carry
+    return jnp.concatenate([top, bot], axis=0)
+
+
+def factor_band_window(window: jax.Array, npiv: int, bw: int) -> jax.Array:
+    """No-pivot LU of the dense band window ``(npiv+bw, npiv+bw)``, retiring
+    pivots ``0..npiv-1``.  Each bi-vector elimination is *confined to the
+    ``(bw+1, bw+1)`` sub-block the band can reach* — the paper's naturally
+    equalized unit: every step is one identical fixed-shape fused update
+    (scale the L column by the pivot, subtract the outer product), with no
+    masking waste on the ``(npiv+bw)²`` window.  Collectively the ``npiv``
+    steps apply the block step's rank-``npiv`` Schur update to the
+    ``(bw, bw)`` carry corner.  Shared verbatim by the Pallas kernels and
+    the pure-jnp mirror (bitwise contract)."""
+
+    def piv(p, wnd):
+        blk = jax.lax.dynamic_slice(wnd, (p, p), (bw + 1, bw + 1))
+        pivot = blk[:1, :1]
+        l_col = blk[:, :1] / pivot
+        u_row = blk[:1, :]
+        upd = blk - l_col * u_row  # rank-1 Schur update on the reachable block
+        blk = jnp.concatenate(
+            [u_row, jnp.concatenate([l_col[1:], upd[1:, 1:]], axis=1)], axis=0
+        )
+        return jax.lax.dynamic_update_slice(wnd, blk, (p, p))
+
+    return jax.lax.fori_loop(0, npiv, piv, window)
+
+
+def unit_lower_window_solve(lwin: jax.Array, y: jax.Array, bw: int) -> jax.Array:
+    """Blocked forward substitution against the packed in-block window
+    (unit-lower L read strictly below the diagonal): per ``C2`` strip a
+    short masked-axpy recurrence (:func:`repro.core.blocked.strip_trsm`),
+    then one rank-``C2`` GEMM retiring the ``bw`` rows the band couples."""
+    c = lwin.shape[0]
+    c2 = sub_block_width(c)
+    for j in range(0, c, c2):
+        strip = strip_trsm(lwin[j : j + c2, j : j + c2], y[j : j + c2, :])
+        y = jax.lax.dynamic_update_slice(y, strip, (j, 0))
+        hr = min(bw, c - j - c2)
+        if hr:
+            lpart = lwin[j + c2 : j + c2 + hr, j : j + c2]
+            tail = y[j + c2 : j + c2 + hr, :] - jnp.dot(
+                lpart, strip, preferred_element_type=jnp.float32
+            ).astype(y.dtype)
+            y = jax.lax.dynamic_update_slice(y, tail, (j + c2, 0))
+    return y
+
+
+def upper_window_solve(uwin: jax.Array, x: jax.Array, bw: int) -> jax.Array:
+    """Blocked backward substitution against the packed in-block window
+    (U on and above the diagonal), mirroring :func:`unit_lower_window_solve`
+    bottom-up with :func:`repro.core.blocked.strip_utrsm` strips."""
+    c = uwin.shape[0]
+    c2 = sub_block_width(c)
+    for j in range(c - c2, -1, -c2):
+        strip = strip_utrsm(uwin[j : j + c2, j : j + c2], x[j : j + c2, :])
+        x = jax.lax.dynamic_update_slice(x, strip, (j, 0))
+        hr = min(bw, j)
+        if hr:
+            upart = uwin[j - hr : j, j : j + c2]
+            head = x[j - hr : j, :] - jnp.dot(
+                upart, strip, preferred_element_type=jnp.float32
+            ).astype(x.dtype)
+            x = jax.lax.dynamic_update_slice(x, head, (j - hr, 0))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# blocked band drivers — pure-jnp mirrors of the Pallas kernels
+# ---------------------------------------------------------------------------
+def skew_rows(n: int, bw: int, block: int) -> int:
+    """Padded row count of the skewed band: a whole number of blocks plus
+    enough carry blocks for the last step's ``bw`` overhang.  ONE formula
+    shared by :func:`skew_pad` and the kernels' VMEM-budget estimate."""
+    s = -(-n // block)
+    return (s + max(1, -(-bw // block))) * block
+
+
+def skew_pad(arow: jax.Array, bw: int, block: int) -> tuple[jax.Array, int]:
+    """Identity-pad the band to :func:`skew_rows` rows and re-lay it into
+    the skewed form the blocked drivers consume.  Returns ``(G, num_steps)``.
+    Shared by the Pallas kernels and the pure-jnp mirrors — the bitwise
+    kernel/mirror contract depends on both sides padding identically."""
+    n = arow.shape[0]
+    ap = pad_band_identity(arow, bw, skew_rows(n, bw, block))
+    return band_to_skewed(ap, bw, block), -(-n // block)
+
+
+def band_step_slabs(g: jax.Array, k, *, block: int, bw: int):
+    """Slice one block step's (own, carry) slabs out of the skewed band at
+    row offset ``k`` (traced or static).  Shared kernel/mirror code."""
+    c = block
+    gw = c + 2 * bw
+    own = jax.lax.dynamic_slice(g, (k, 0), (c, gw))
+    if c >= bw:
+        carry = jax.lax.dynamic_slice(g, (k + c, 0), (bw, 2 * bw))
+    else:
+        carry = jax.lax.dynamic_slice(g, (k + c, bw - c), (bw, c + bw))
+    return own, carry
+
+
+def band_step_writeback(g: jax.Array, window: jax.Array, k, *, block: int, bw: int):
+    """Write a factored window back into the skewed band: the step's own
+    ``C`` rows are final; its ``bw`` carry rows flow into the next block's
+    leading columns.  Shared kernel/mirror code."""
+    c = block
+    g = jax.lax.dynamic_update_slice(g, window[:c, :], (k, bw))
+    if c >= bw:
+        return jax.lax.dynamic_update_slice(g, window[c:, c - bw :], (k + c, 0))
+    return jax.lax.dynamic_update_slice(g, window[c:, :], (k + c, bw - c))
+
+
+def band_block_step(g: jax.Array, k, *, block: int, bw: int) -> jax.Array:
+    """One blocked band LU step on the skewed band: assemble the dense
+    window from two static slices, retire ``C`` pivots, write back.  Shared
+    verbatim by the Pallas kernels and the pure-jnp mirror."""
+    own, carry = band_step_slabs(g, k, block=block, bw=bw)
+    window = factor_band_window(band_window_from_slabs(own, carry, bw), block, bw)
+    return band_step_writeback(g, window, k, block=block, bw=bw)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "block"))
+def banded_lu_blocked(arow: jax.Array, *, bw: int, block: int | None = None) -> jax.Array:
+    """Blocked no-pivot band LU: ``C`` rows retired per step through the
+    dense band window on the skewed layout.  Op-identical mirror of
+    :func:`repro.kernels.banded.banded_lu_blocked` /
+    :func:`repro.kernels.banded.banded_lu_tiled` — bitwise-equal packed band
+    factors by construction."""
+    n = arow.shape[0]
+    c = band_block_size(n, bw, block)
+    g, s = skew_pad(arow, bw, c)
+    for i in range(s):
+        g = band_block_step(g, i * c, block=c, bw=bw)
+    return skewed_to_band(g, bw, c)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "block"))
+def banded_solve_blocked(
+    lu_band: jax.Array, b: jax.Array, *, bw: int, block: int | None = None
+) -> jax.Array:
+    """Blocked forward+backward substitution on the packed band factors —
+    op-identical mirror of
+    :func:`repro.kernels.banded.banded_solve_kernelized`."""
+    n = lu_band.shape[0]
+    squeeze = b.ndim == 1
+    bm = b[:, None] if squeeze else b
+    m = bm.shape[1]
+    c = band_block_size(n, bw, block)
+    s = -(-n // c)
+    np_rows = s * c
+    # in the skewed layout each block's dense coupling strip F (C, C+2bw) —
+    # columns k-bw .. k+C+bw-1 — is one contiguous row slice, no gather:
+    # F[:, :bw] couples to rows above the block, F[:, bw:bw+C] is the
+    # in-block packed L/U window, F[:, bw+C:] couples to rows below.
+    g = band_to_skewed(pad_band_identity(lu_band, bw, np_rows), bw, c)
+    # x carries `bw` zero margin rows on both ends so every block reads its
+    # above/below coupling windows without branching (rows [bw, bw+n) real).
+    xp = jnp.zeros((bw + np_rows + bw, m), bm.dtype).at[bw : bw + n].set(bm)
+    for i in range(s):
+        k = i * c
+        f = g[k : k + c]
+        yblk = xp[bw + k : bw + k + c] - jnp.dot(
+            f[:, :bw], xp[k : k + bw], preferred_element_type=jnp.float32
+        ).astype(xp.dtype)
+        yblk = unit_lower_window_solve(f[:, bw : bw + c], yblk, bw)
+        xp = jax.lax.dynamic_update_slice(xp, yblk, (bw + k, 0))
+    for i in range(s - 1, -1, -1):
+        k = i * c
+        f = g[k : k + c]
+        xblk = xp[bw + k : bw + k + c] - jnp.dot(
+            f[:, bw + c :], xp[bw + k + c : bw + k + c + bw], preferred_element_type=jnp.float32
+        ).astype(xp.dtype)
+        xblk = upper_window_solve(f[:, bw : bw + c], xblk, bw)
+        xp = jax.lax.dynamic_update_slice(xp, xblk, (bw + k, 0))
+    x = xp[bw : bw + n]
+    return x[:, 0] if squeeze else x
+
+
+def banded_linear_solve_blocked(
+    arow: jax.Array, b: jax.Array, *, bw: int, block: int | None = None
+) -> jax.Array:
+    """Factor + solve through the blocked mirrors."""
+    return banded_solve_blocked(banded_lu_blocked(arow, bw=bw, block=block), b, bw=bw, block=block)

@@ -25,9 +25,11 @@ __all__ = [
     "panel_factor",
     "blocked_lu",
     "fused_blocked_lu",
+    "fused_lu_steps",
     "fused_block_size",
     "sub_block_width",
     "strip_trsm",
+    "strip_utrsm",
     "factor_diag_strip",
     "solve_below_strip",
     "pad_identity_tail",
@@ -52,7 +54,8 @@ def pad_identity_tail(a: jax.Array, n_to: int) -> jax.Array:
     if n_to == n:
         return a
     pad_ix = jnp.arange(n, n_to)
-    return jnp.zeros((n_to, n_to), a.dtype).at[:n, :n].set(a).at[pad_ix, pad_ix].set(1.0)
+    one = jnp.ones((), a.dtype)
+    return jnp.zeros((n_to, n_to), a.dtype).at[:n, :n].set(a).at[pad_ix, pad_ix].set(one)
 
 
 def strip_trsm(ldiag: jax.Array, rhs: jax.Array) -> jax.Array:
@@ -70,6 +73,27 @@ def strip_trsm(ldiag: jax.Array, rhs: jax.Array) -> jax.Array:
         return u - lk * uk
 
     return jax.lax.fori_loop(0, c2 - 1, body, rhs)
+
+
+def strip_utrsm(udiag: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Upper-triangular solve (diagonal division included) of a ``(C2, w)``
+    strip against the ``(C2, C2)`` diagonal block, as a short backward
+    masked-axpy recurrence on an array carry — the backward-sweep twin of
+    :func:`strip_trsm`.  Shared verbatim by the banded solve kernel and its
+    pure-jnp mirror, so their bitwise equality holds by construction."""
+    c2 = udiag.shape[0]
+    w = rhs.shape[1]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (c2, 1), 0)
+
+    def body(kk, x):
+        k = c2 - 1 - kk
+        pivot = jax.lax.dynamic_slice(udiag, (k, k), (1, 1))
+        xk = jax.lax.dynamic_slice(x, (k, 0), (1, w)) / pivot
+        x = jax.lax.dynamic_update_slice(x, xk, (k, 0))
+        uk = jnp.where(rows < k, jax.lax.dynamic_slice(udiag, (0, k), (c2, 1)), 0.0)
+        return x - uk * xk
+
+    return jax.lax.fori_loop(0, c2, body, rhs)
 
 
 def factor_diag_strip(dblk: jax.Array, j: int) -> jax.Array:
@@ -171,24 +195,15 @@ def blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
     return a
 
 
-def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
-    """Pure-jnp mirror of the single-dispatch Pallas megakernel
-    (:func:`repro.kernels.ebv_lu.lu_fused`) — op-for-op identical shapes and
-    ordering, so the two produce bitwise-identical packed LU factors.
-
-    Structure per step ``s`` (matrix padded to ``S·B`` with an inert identity
-    tail): two-level panel factorization (``C2``-wide strip rank-1 loop, strip
-    trsm, rank-``C2`` GEMM retirement per (B, C2) row block), then per
-    trailing block-column tile a two-level unit-lower trsm and the rank-``B``
-    trailing GEMM per row block.  This is also the fast ``impl="xla"`` path:
-    O(B/C2) passes over each slab instead of the O(B) passes of
-    :func:`blocked_lu`."""
-    n = a.shape[-1]
-    B = fused_block_size(n, block)
-    S = -(-n // B)
-    N = S * B
+def fused_lu_steps(a: jax.Array, *, block: int, num_steps: int) -> jax.Array:
+    """Value-level body of the fused blocked LU on an already-padded
+    ``(S·B, S·B)`` array: two-level panel factorization + trailing-tile
+    trsm/update per step.  Shared verbatim by the pure-jnp mirror
+    (:func:`fused_blocked_lu`) and the small-n VMEM megakernel
+    (:func:`repro.kernels.ebv_lu.lu_fused`) — both trace these exact ops,
+    which is what makes their packed factors bitwise-identical."""
+    B, S = block, num_steps
     C2 = sub_block_width(B)
-    a = pad_identity_tail(a, N)
     for s in range(S):
         base = s * B
         # ---- panel: two-level factorization of the column slab
@@ -207,7 +222,7 @@ def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
                 lpart = diag[j + C2 :, :]
                 blk = a[r0 + C2 : base + B, r0 + C2 : base + B]
                 a = a.at[r0 + C2 : base + B, r0 + C2 : base + B].set(
-                    blk - jnp.dot(lpart, u, preferred_element_type=jnp.float32)
+                    (blk - jnp.dot(lpart, u, preferred_element_type=jnp.float32)).astype(a.dtype)
                 )
 
             # (3) row blocks below: right-solve multipliers + GEMM retirement
@@ -218,7 +233,7 @@ def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
                 if w:
                     blkr = a[off : off + B, r0 + C2 : base + B]
                     a = a.at[off : off + B, r0 + C2 : base + B].set(
-                        blkr - jnp.dot(strip, u, preferred_element_type=jnp.float32)
+                        (blkr - jnp.dot(strip, u, preferred_element_type=jnp.float32)).astype(a.dtype)
                     )
         # ---- trailing tiles: two-level trsm + rank-B update per row block
         for t in range(s + 1, S):
@@ -231,7 +246,9 @@ def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
                 w = B - j - C2
                 if w:
                     lpart = a[r0 + C2 : base + B, r0 : r0 + C2]
-                    tail = y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                    tail = (
+                        y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                    ).astype(y.dtype)
                     y = jax.lax.dynamic_update_slice(y, tail, (j + C2, 0))
             a = a.at[base : base + B, tb : tb + B].set(y)
             for r in range(s + 1, S):
@@ -239,8 +256,29 @@ def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
                 lblk = a[off : off + B, base : base + B]
                 blk = a[off : off + B, tb : tb + B]
                 a = a.at[off : off + B, tb : tb + B].set(
-                    blk - jnp.dot(lblk, y, preferred_element_type=jnp.float32)
+                    (blk - jnp.dot(lblk, y, preferred_element_type=jnp.float32)).astype(a.dtype)
                 )
+    return a
+
+
+def fused_blocked_lu(a: jax.Array, *, block: int = 256) -> jax.Array:
+    """Pure-jnp mirror of the single-dispatch Pallas megakernel
+    (:func:`repro.kernels.ebv_lu.lu_fused`) — op-for-op identical shapes and
+    ordering, so the two produce bitwise-identical packed LU factors.
+
+    Structure per step ``s`` (matrix padded to ``S·B`` with an inert identity
+    tail): two-level panel factorization (``C2``-wide strip rank-1 loop, strip
+    trsm, rank-``C2`` GEMM retirement per (B, C2) row block), then per
+    trailing block-column tile a two-level unit-lower trsm and the rank-``B``
+    trailing GEMM per row block.  This is also the fast ``impl="xla"`` path:
+    O(B/C2) passes over each slab instead of the O(B) passes of
+    :func:`blocked_lu`."""
+    n = a.shape[-1]
+    B = fused_block_size(n, block)
+    S = -(-n // B)
+    N = S * B
+    a = pad_identity_tail(a, N)
+    a = fused_lu_steps(a, block=B, num_steps=S)
     return a[:n, :n] if N != n else a
 
 

@@ -45,6 +45,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.blocked import (
     factor_diag_strip,
     fused_block_size,
+    fused_lu_steps,
     pad_identity_tail,
     solve_below_strip,
     strip_trsm,
@@ -52,6 +53,14 @@ from repro.core.blocked import (
 )
 
 __all__ = ["lu_fused", "lu_vmem", "panel", "fused_step", "update"]
+
+# Padded orders at or below this run the fused LU as a VMEM-resident value
+# kernel (no HBM scratch streaming).  The HBM megakernel's interpret-mode
+# DMA emulation and per-strip scratch-ref copies made it *slower* than its
+# own pure-jnp mirror at n=256 (3460 vs 3166 µs, BENCH_kernels.json seed);
+# on a VMEM value the kernel traces exactly the mirror's ops.  2·N²·4 bytes
+# of VMEM at N=512 is 2 MB — comfortable on real TPUs too.
+_FUSED_VMEM_MAX_N = 512
 
 
 def _rows_cols(m: int, n: int):
@@ -326,6 +335,14 @@ def _fused_lu_kernel(a_any, o_any, panel_buf, tile1_buf, tile2_buf, sems, *, num
         process(tile2_buf, sems.at[2], t2)
 
 
+def _fused_vmem_lu_kernel(a_ref, o_ref, *, num_steps: int, block: int):
+    """Small-n fused LU: the padded matrix is one VMEM block and the kernel
+    runs the mirror's exact value-level step sequence — no DMA, no scratch
+    refs, still one ``pallas_call`` (and still bitwise-equal to the mirror
+    by construction)."""
+    o_ref[...] = fused_lu_steps(a_ref[...], block=block, num_steps=num_steps)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -> jax.Array:
     """Single-dispatch blocked EbV LU: the whole factorization in ONE
@@ -337,6 +354,10 @@ def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -
     ``a.at[...].set`` copies and no per-block-column dispatches remain.
     VMEM footprint is 3·N·B floats (one panel slab + two double-buffered tile
     slabs), independent of the matrix being square-resident.
+
+    Padded orders ≤ ``_FUSED_VMEM_MAX_N`` skip the HBM streaming entirely and
+    run the same step sequence on a VMEM-resident value — the small-n fast
+    path (see ``_fused_vmem_lu_kernel``).
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
@@ -347,6 +368,14 @@ def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -
     S = -(-n // B)
     N = S * B
     a = pad_identity_tail(a, N)
+    if N <= _FUSED_VMEM_MAX_N:
+        out = pl.pallas_call(
+            functools.partial(_fused_vmem_lu_kernel, num_steps=S, block=B),
+            out_shape=jax.ShapeDtypeStruct((N, N), a.dtype),
+            input_output_aliases={0: 0},  # carried in place, like the HBM path
+            interpret=interpret,
+        )(a)
+        return out[:n, :n] if N != n else out
     num_programs = max(1, S // 2)
     out = pl.pallas_call(
         functools.partial(_fused_lu_kernel, num_steps=S, block=B),

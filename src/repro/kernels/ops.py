@@ -4,8 +4,10 @@
   * ``"pallas_fused"``   — DEFAULT: single-dispatch EbV LU megakernel — one
                            ``pallas_call`` for the whole factorization, matrix
                            carried in place in HBM (see
-                           :func:`repro.kernels.ebv_lu.lu_fused`).  Falls back
-                           to ``"pallas_blocked"`` for non-float32 dtypes.
+                           :func:`repro.kernels.ebv_lu.lu_fused`; small
+                           matrices run its VMEM-resident variant).  Non-fp32
+                           inputs fall back to the op-identical ``"xla"``
+                           mirror with a one-time warning naming the dtype.
   * ``"pallas_blocked"`` — legacy multi-launch blocked driver: one panel
                            kernel + one fused bi-vector step kernel per block
                            column (kept as the fallback/baseline; see
@@ -22,12 +24,27 @@
   * ``"pallas_vmem"`` / ``"pallas_tiled"`` — force either driver.
   * ``"xla"``            — pure-jnp substitution from :mod:`repro.core`.
 
+``banded_lu`` impl dispatch (band row-aligned, see :mod:`repro.core.banded`):
+  * ``"pallas"``         — DEFAULT: auto — the VMEM blocked megakernel while
+                           the padded band fits VMEM, the HBM-streaming tiled
+                           kernel beyond.
+  * ``"pallas_blocked"`` / ``"pallas_tiled"`` — force either blocked driver.
+  * ``"pallas_scalar"``  — legacy scalar-sequential kernel (n−1 rank-1 steps).
+  * ``"xla"``            — pure-jnp mirror of the blocked kernels
+                           (:func:`repro.core.banded.banded_lu_blocked`),
+                           bitwise-identical to both.
+  * ``"xla_scalar"``     — legacy scalar jnp loop.
+
+``banded_solve`` mirrors the table: ``"pallas"`` (blocked kernel), ``"xla"``
+(blocked mirror), ``"xla_scalar"`` (scalar jnp loop).
+
 On CPU (this container) the Pallas paths run in interpret mode automatically;
 on TPU they lower to Mosaic.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +56,40 @@ from . import ebv_lu as _k
 from . import trsm as _trsm
 from . import banded as _kbanded
 
-__all__ = ["lu", "lu_solve", "linear_solve", "banded_lu"]
+__all__ = [
+    "lu",
+    "lu_solve",
+    "linear_solve",
+    "banded_lu",
+    "banded_solve",
+    "banded_linear_solve",
+]
 
 # Above this order the packed (n, n) LU no longer comfortably shares VMEM
 # with an RHS tile, so the auto solve dispatch switches to the tiled driver.
 _SOLVE_VMEM_MAX_N = 2048
+
+# Above this many skewed-band bytes the auto banded dispatch switches from
+# the VMEM-resident blocked kernel to the HBM-streaming tiled kernel (the
+# VMEM kernel holds the skewed band twice — in and out — on real TPUs).
+_BANDED_VMEM_MAX_BYTES = 6 * 2**20
+
+_FUSED_FALLBACK_WARNED: set[str] = set()
+
+
+def _warn_fused_dtype_fallback(dtype) -> None:
+    """One-time (per dtype) warning when the fp32-only fused kernel falls
+    back to its op-identical pure-jnp mirror."""
+    key = str(dtype)
+    if key not in _FUSED_FALLBACK_WARNED:
+        _FUSED_FALLBACK_WARNED.add(key)
+        warnings.warn(
+            f"lu(impl='pallas_fused') supports float32 only; got {key} — "
+            "falling back to the op-identical 'xla' mirror "
+            "(repro.core.blocked.fused_blocked_lu)",
+            UserWarning,
+            stacklevel=3,
+        )
 
 
 def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bool | None) -> jax.Array:
@@ -90,7 +136,11 @@ def lu(
     if impl == "pallas_fused":
         if a.dtype == jnp.float32:
             return _k.lu_fused(a, block=block, interpret=interpret)
-        impl = "pallas_blocked"  # fused kernel is fp32-only; fall back
+        # The fused kernel is fp32-only.  Fall back to its bitwise mirror
+        # (as fast as fused at n=1024 per BENCH_kernels.json) rather than
+        # the ~9x-slower multi-launch blocked driver.
+        _warn_fused_dtype_fallback(a.dtype)
+        impl = "xla"
     if impl == "pallas_vmem":
         return _k.lu_vmem(a, interpret=interpret)
     if impl == "pallas_blocked":
@@ -122,16 +172,99 @@ def lu_solve(
     raise ValueError(f"unknown impl {impl!r}")
 
 
-def linear_solve(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+def linear_solve(a: jax.Array, b: jax.Array, *, solve_impl: str | None = None, **kw) -> jax.Array:
+    """Factor + solve.  ``impl`` routes BOTH phases: the factor phase gets it
+    verbatim; the solve phase runs ``"xla"`` when the factor does and the
+    Pallas auto driver otherwise (``impl="xla"`` used to silently solve with
+    the default Pallas path).  Pass ``solve_impl`` to mix phases
+    deliberately (any :func:`lu_solve` impl name)."""
     lu_kw = {k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}
     solve_kw = {k: v for k, v in kw.items() if k in ("block", "rhs_tile", "interpret")}
+    if solve_impl is None and "impl" in kw:
+        solve_impl = "xla" if kw["impl"] == "xla" else "pallas"
+    if solve_impl is not None:
+        solve_kw["impl"] = solve_impl
     return lu_solve(lu(a, **lu_kw), b, **solve_kw)
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "impl", "interpret"))
-def banded_lu(arow: jax.Array, *, bw: int, impl: str = "pallas", interpret: bool | None = None) -> jax.Array:
+def _banded_auto_impl(n: int, bw: int, block: int | None, itemsize: int) -> str:
+    c = _core_banded.band_block_size(n, bw, block)
+    skew_bytes = _core_banded.skew_rows(n, bw, c) * (c + 2 * bw) * itemsize
+    return "pallas_blocked" if skew_bytes <= _BANDED_VMEM_MAX_BYTES else "pallas_tiled"
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "impl", "block", "interpret"))
+def banded_lu(
+    arow: jax.Array,
+    *,
+    bw: int,
+    impl: str = "pallas",
+    block: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed band LU on the row-aligned band (no pivoting)."""
     if impl == "pallas":
+        impl = _banded_auto_impl(arow.shape[0], bw, block, jnp.dtype(arow.dtype).itemsize)
+    if impl == "pallas_blocked":
+        return _kbanded.banded_lu_blocked(arow, bw=bw, block=block, interpret=interpret)
+    if impl == "pallas_tiled":
+        return _kbanded.banded_lu_tiled(arow, bw=bw, block=block, interpret=interpret)
+    if impl == "pallas_scalar":
         return _kbanded.banded_lu_kernelized(arow, bw=bw, interpret=interpret)
     if impl == "xla":
+        return _core_banded.banded_lu_blocked(arow, bw=bw, block=block)
+    if impl == "xla_scalar":
         return _core_banded.banded_lu(arow, bw=bw)
     raise ValueError(f"unknown impl {impl!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "impl", "block", "rhs_tile", "interpret"))
+def banded_solve(
+    lu_band: jax.Array,
+    b: jax.Array,
+    *,
+    bw: int,
+    impl: str = "pallas",
+    block: int | None = None,
+    rhs_tile: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Forward+backward substitution on packed band factors.
+
+    The default targets TPU residency (single-dispatch blocked kernel,
+    factors streamed strip-by-strip from HBM); on this CPU container the
+    interpret-mode DMA emulation makes ``impl="xla_scalar"`` the faster
+    choice for one-off solves — see ``BENCH_kernels.json``
+    (``banded_solve_n16384_*``)."""
+    if impl == "pallas":
+        return _kbanded.banded_solve_kernelized(
+            lu_band, b, bw=bw, block=block, rhs_tile=rhs_tile, interpret=interpret
+        )
+    if impl == "xla":
+        return _core_banded.banded_solve_blocked(lu_band, b, bw=bw, block=block)
+    if impl == "xla_scalar":
+        return _core_banded.banded_solve(lu_band, b, bw=bw)
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def banded_linear_solve(
+    arow: jax.Array,
+    b: jax.Array,
+    *,
+    bw: int,
+    impl: str = "pallas",
+    solve_impl: str | None = None,
+    block: int | None = None,
+    rhs_tile: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Banded factor + solve with ``impl`` routed to BOTH phases (the same
+    contract :func:`linear_solve` honours): ``"xla*"`` factor impls solve
+    through the matching jnp path, Pallas factor impls solve through the
+    blocked solve kernel.  ``solve_impl`` overrides the solve phase."""
+    if solve_impl is None:
+        solve_impl = impl if impl in ("xla", "xla_scalar") else "pallas"
+    lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret)
+    return banded_solve(
+        lub, b, bw=bw, impl=solve_impl, block=block, rhs_tile=rhs_tile, interpret=interpret
+    )

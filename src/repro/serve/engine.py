@@ -55,9 +55,12 @@ class Engine:
         prompt_offset = self.cfg.num_prefix_embeds if self.cfg.family == "vlm" else 0
         assert s0 + prompt_offset + max_new_tokens <= self.max_len, "max_len too small"
         caches, logits = self._prefill(self.params, self._model_batch(prompts))
-        key = jax.random.PRNGKey(seed)
+        # Split before the first use: sampling with the root key and then
+        # re-splitting it would correlate the first sampled token with every
+        # later step's subkey stream.
+        key, sub = jax.random.split(jax.random.PRNGKey(seed))
         out = [prompts]
-        tok = self._sample(logits[:, -1], temperature, key)
+        tok = self._sample(logits[:, -1], temperature, sub)
         pos = s0 + prompt_offset
         for i in range(max_new_tokens - 1):
             out.append(np.asarray(tok))

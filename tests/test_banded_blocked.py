@@ -1,0 +1,199 @@
+"""Blocked banded megakernel suite: bitwise kernel/mirror agreement, edge
+cases (non-divisible n, tridiagonal, bw ≥ n), single-dispatch counts, solve
+coverage and the batched grid path (ISSUE 3 acceptance criteria)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_diagonally_dominant, to_banded, from_banded
+from repro.core import banded as cband
+from repro.kernels import banded as kband
+from repro.kernels import ops, ref
+from repro.utils.hlo import primitive_count
+
+
+def _band_system(n, bw, *, key=0):
+    ad = make_diagonally_dominant(jax.random.PRNGKey(key + n + bw), n, sparse_band=bw)
+    return ad, to_banded(ad, bw)
+
+
+# ---------------------------------------------------------------------------
+# skewed layout: exact data movement
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("c,bw,blocks", [(8, 2, 3), (16, 5, 2), (4, 6, 5), (32, 1, 2)])
+def test_skew_roundtrip_exact(c, bw, blocks):
+    r, w = c * blocks, 2 * bw + 1
+    ap = jnp.asarray(np.random.default_rng(0).normal(size=(r, w)).astype(np.float32))
+    g = cband.band_to_skewed(ap, bw, c)
+    apn = np.asarray(ap)
+    expect = np.zeros((r, c + 2 * bw), np.float32)
+    for i in range(r):
+        r0 = i % c
+        expect[i, r0 : r0 + w] = apn[i]
+    np.testing.assert_array_equal(np.asarray(g), expect)
+    np.testing.assert_array_equal(np.asarray(cband.skewed_to_band(g, bw, c)), apn)
+
+
+# ---------------------------------------------------------------------------
+# factorization: bitwise kernel/mirror sweep + oracle agreement
+# ---------------------------------------------------------------------------
+BANDED_SWEEP = [
+    (64, 4, None),   # divisible, auto block
+    (97, 3, 32),     # non-divisible n vs block (prime n)
+    (33, 1, 16),     # bw=1 tridiagonal, non-divisible
+    (16, 20, None),  # bw >= n: degenerate-to-dense
+    (200, 8, 64),
+    (128, 16, None),
+    (60, 7, 13),     # odd block, non-divisible
+]
+
+
+@pytest.mark.parametrize("n,bw,block", BANDED_SWEEP)
+def test_banded_blocked_bitwise_and_oracle(n, bw, block):
+    """Acceptance: both blocked kernels produce band LU bitwise-identical to
+    the core/banded.py mirror across the {n, bw} sweep, and match the dense
+    numpy oracle."""
+    _, arow = _band_system(n, bw)
+    want = np.asarray(cband.banded_lu_blocked(arow, bw=bw, block=block))
+    oracle = ref.banded_lu_ref(np.asarray(arow), bw)
+    np.testing.assert_allclose(want, oracle, atol=1e-4 * max(n, 32))
+    got_vmem = np.asarray(kband.banded_lu_blocked(arow, bw=bw, block=block))
+    got_tiled = np.asarray(kband.banded_lu_tiled(arow, bw=bw, block=block))
+    np.testing.assert_array_equal(got_vmem, want)
+    np.testing.assert_array_equal(got_tiled, want)
+
+
+def test_banded_blocked_matches_scalar_paths():
+    """Blocked and legacy scalar paths factor the same band (to tolerance —
+    their elimination orders differ in last bits)."""
+    n, bw = 96, 5
+    _, arow = _band_system(n, bw)
+    blocked = np.asarray(ops.banded_lu(arow, bw=bw, impl="pallas_blocked"))
+    scalar_k = np.asarray(ops.banded_lu(arow, bw=bw, impl="pallas_scalar"))
+    scalar_x = np.asarray(ops.banded_lu(arow, bw=bw, impl="xla_scalar"))
+    np.testing.assert_allclose(blocked, scalar_k, atol=1e-4)
+    np.testing.assert_allclose(blocked, scalar_x, atol=1e-4)
+
+
+def test_banded_degenerate_dense_equivalence():
+    """bw >= n: the band covers the whole matrix, so the band LU must equal
+    the dense no-pivot LU."""
+    n, bw = 24, 30
+    ad, arow = _band_system(n, bw)
+    lub = ops.banded_lu(arow, bw=bw)
+    dense_lu = ref.lu_ref(np.asarray(ad, np.float64))
+    np.testing.assert_allclose(np.asarray(from_banded(lub)), dense_lu, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# solve: bitwise kernel/mirror + residuals + RHS shapes
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bw,block,m", [(64, 4, None, 5), (97, 3, 32, 1), (33, 1, 16, 7), (16, 20, None, 3)])
+def test_banded_solve_bitwise_and_residual(n, bw, block, m):
+    ad, arow = _band_system(n, bw)
+    lub = cband.banded_lu_blocked(arow, bw=bw, block=block)
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, m))
+    want = np.asarray(cband.banded_solve_blocked(lub, b, bw=bw, block=block))
+    got = np.asarray(kband.banded_solve_kernelized(lub, b, bw=bw, block=block))
+    np.testing.assert_array_equal(got, want)
+    res = np.linalg.norm(np.asarray(ad, np.float64) @ got - np.asarray(b)) / np.linalg.norm(np.asarray(b))
+    assert res < 1e-5
+
+
+def test_banded_solve_1d_rhs_and_scalar_agreement():
+    n, bw = 80, 6
+    _, arow = _band_system(n, bw)
+    b = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    x = ops.banded_linear_solve(arow, b, bw=bw)
+    assert x.shape == (n,)
+    x_scalar = cband.banded_lu_solve(arow, b, bw=bw)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(x_scalar), atol=1e-5)
+
+
+def test_banded_solve_nondivisible_rhs_tile():
+    """RHS wider than one tile and not a multiple of it pads and slices back."""
+    n, bw = 48, 3
+    _, arow = _band_system(n, bw)
+    lub = ops.banded_lu(arow, bw=bw)
+    b = jax.random.normal(jax.random.PRNGKey(4), (n, 11))
+    got = np.asarray(ops.banded_solve(lub, b, bw=bw, rhs_tile=4))
+    want = np.asarray(ops.banded_solve(lub, b, bw=bw, impl="xla"))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# dispatch: one pallas_call per factor/solve (acceptance), impl routing
+# ---------------------------------------------------------------------------
+def test_banded_single_dispatch():
+    n, bw = 96, 4
+    _, arow = _band_system(n, bw)
+    b = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    for impl in ("pallas_blocked", "pallas_tiled"):
+        jx = jax.make_jaxpr(lambda a: ops.banded_lu(a, bw=bw, impl=impl))(arow)
+        assert primitive_count(jx, "pallas_call") == 1, impl
+    lub = ops.banded_lu(arow, bw=bw)
+    jx = jax.make_jaxpr(lambda l, r: ops.banded_solve(l, r, bw=bw))(lub, b)
+    assert primitive_count(jx, "pallas_call") == 1
+    jx = jax.make_jaxpr(lambda a, r: ops.banded_linear_solve(a, r, bw=bw))(arow, b)
+    assert primitive_count(jx, "pallas_call") == 2  # one factor + one solve
+
+
+def test_banded_xla_impl_traces_no_pallas():
+    """impl='xla' must route BOTH phases through the jnp mirrors."""
+    n, bw = 64, 4
+    _, arow = _band_system(n, bw)
+    b = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    jx = jax.make_jaxpr(lambda a, r: ops.banded_linear_solve(a, r, bw=bw, impl="xla"))(arow, b)
+    assert primitive_count(jx, "pallas_call") == 0
+    got = np.asarray(ops.banded_linear_solve(arow, b, bw=bw, impl="xla"))
+    want = np.asarray(ops.banded_linear_solve(arow, b, bw=bw))
+    np.testing.assert_array_equal(got, want)  # mirrors are bitwise twins
+
+
+def test_banded_auto_impl_thresholds():
+    assert ops._banded_auto_impl(512, 4, None, 4) == "pallas_blocked"
+    assert ops._banded_auto_impl(200_000, 16, None, 4) == "pallas_tiled"
+    # dtype-aware: a float64 band twice the f32 footprint tips to streaming
+    n_edge = 9000  # skewed f32 footprint ~5.9 MB: just under the 6 MB cap
+    assert ops._banded_auto_impl(n_edge, 16, None, 4) == "pallas_blocked"
+    assert ops._banded_auto_impl(n_edge, 16, None, 8) == "pallas_tiled"
+
+
+def test_banded_unknown_impl_raises():
+    _, arow = _band_system(32, 2)
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.banded_lu(arow, bw=2, impl="nope")
+
+
+# ---------------------------------------------------------------------------
+# batched grid path (optimizer workload)
+# ---------------------------------------------------------------------------
+def test_batched_banded_lu_and_solve():
+    bw, n, bsz = 3, 40, 4
+    bands = jnp.stack(
+        [to_banded(make_diagonally_dominant(jax.random.PRNGKey(i), n, sparse_band=bw), bw)
+         for i in range(bsz)]
+    )
+    lub = kband.batched_banded_lu_vmem(bands, bw=bw)
+    b = jax.random.normal(jax.random.PRNGKey(9), (bsz, n, 2))
+    x = kband.batched_banded_solve_vmem(lub, b, bw=bw)
+    for i in range(bsz):
+        want_lu = np.asarray(cband.banded_lu_blocked(bands[i], bw=bw))
+        np.testing.assert_allclose(np.asarray(lub[i]), want_lu, atol=1e-6)
+        want_x = np.asarray(cband.banded_solve_blocked(lub[i], b[i], bw=bw))
+        np.testing.assert_allclose(np.asarray(x[i]), want_x, atol=1e-5)
+
+
+def test_batched_banded_solve_1d_rhs():
+    bw, n, bsz = 2, 24, 3
+    bands = jnp.stack(
+        [to_banded(make_diagonally_dominant(jax.random.PRNGKey(i + 50), n, sparse_band=bw), bw)
+         for i in range(bsz)]
+    )
+    lub = kband.batched_banded_lu_vmem(bands, bw=bw)
+    b = jax.random.normal(jax.random.PRNGKey(10), (bsz, n))
+    x = kband.batched_banded_solve_vmem(lub, b, bw=bw)
+    assert x.shape == (bsz, n)
+    batched_single = jax.make_jaxpr(lambda a: kband.batched_banded_lu_vmem(a, bw=bw))(bands)
+    assert primitive_count(batched_single, "pallas_call") == 1

@@ -83,9 +83,60 @@ def test_fused_is_default_impl():
 
 def test_fused_bf16_falls_back():
     a = make_diagonally_dominant(jax.random.PRNGKey(4), 64, dtype=jnp.bfloat16)
-    out = ops.lu(a, block=32, col_tile=32)  # must not raise; blocked fallback
+    out = ops.lu(a, block=32, col_tile=32)  # must not raise; xla-mirror fallback
     assert out.dtype == jnp.bfloat16
     assert np.isfinite(np.asarray(out, np.float32)).all()
+
+
+def test_fused_dtype_fallback_warns_once_and_uses_xla():
+    """Regression: non-fp32 input used to drop silently to the ~9x-slower
+    pallas_blocked driver; it now warns once (naming the dtype) and falls
+    back to the op-identical xla mirror."""
+    ops._FUSED_FALLBACK_WARNED.clear()
+    n = 72  # unique shape so jit re-traces and the warning path runs
+    a = make_diagonally_dominant(jax.random.PRNGKey(14), n, dtype=jnp.bfloat16)
+    with pytest.warns(UserWarning, match="float32 only; got bfloat16"):
+        got = ops.lu(a, block=32)
+    # the fallback is the xla mirror, not the blocked driver
+    jaxpr = jax.make_jaxpr(lambda x: ops.lu(x, block=32))(a)
+    assert primitive_count(jaxpr, "pallas_call") == 0
+    want = np.asarray(ops.lu(a, impl="xla", block=32), np.float32)
+    np.testing.assert_array_equal(np.asarray(got, np.float32), want)
+    # one-time: a second non-fp32 call does not warn again
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as rec:
+        _warnings.simplefilter("always")
+        ops.lu(make_diagonally_dominant(jax.random.PRNGKey(15), 76, dtype=jnp.bfloat16), block=32)
+    assert not any("float32 only" in str(w.message) for w in rec)
+
+
+# ---------------------------------------------------------------------------
+# linear_solve impl routing (regression: solve phase used to drop `impl`)
+# ---------------------------------------------------------------------------
+def test_linear_solve_routes_impl_to_both_phases():
+    """linear_solve(impl='xla') used to factor with XLA but silently solve
+    with the default Pallas path; now both phases honour it."""
+    n = 64
+    a = make_diagonally_dominant(jax.random.PRNGKey(16), n)
+    b = jax.random.normal(jax.random.PRNGKey(17), (n, 4))
+    jaxpr = jax.make_jaxpr(lambda a, b: ops.linear_solve(a, b, impl="xla"))(a, b)
+    assert primitive_count(jaxpr, "pallas_call") == 0
+    jaxpr_p = jax.make_jaxpr(lambda a, b: ops.linear_solve(a, b, impl="pallas_fused"))(a, b)
+    assert primitive_count(jaxpr_p, "pallas_call") == 2  # one factor + one solve
+
+
+def test_linear_solve_solve_impl_mixing():
+    """Deliberate phase mixing: Pallas factor + xla substitution."""
+    n = 64
+    a = make_diagonally_dominant(jax.random.PRNGKey(18), n)
+    b = jax.random.normal(jax.random.PRNGKey(19), (n, 3))
+    jaxpr = jax.make_jaxpr(
+        lambda a, b: ops.linear_solve(a, b, impl="pallas_fused", solve_impl="xla")
+    )(a, b)
+    assert primitive_count(jaxpr, "pallas_call") == 1  # factor only
+    got = np.asarray(ops.linear_solve(a, b, impl="pallas_fused", solve_impl="xla"))
+    res = np.linalg.norm(np.asarray(a, np.float64) @ got - np.asarray(b)) / np.linalg.norm(np.asarray(b))
+    assert res < 1e-4
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,29 @@ def test_sampled_generation(setup):
     assert out.shape == (2, 8)
 
 
+def test_sample_keys_distinct_from_root(setup):
+    """Regression: the first _sample used to consume the root PRNG key that
+    was then re-split for later steps, correlating the first token with the
+    rest of the stream.  Every per-step key must differ from the root and
+    from each other."""
+    cfg, params = setup
+    eng = Engine(params, cfg, max_len=32)
+    seen = []
+    orig = eng._sample
+
+    def spy(logits, temperature, key):
+        seen.append(np.asarray(key).copy())
+        return orig(logits, temperature, key)
+
+    eng._sample = spy
+    eng.generate(np.zeros((1, 4), np.int32), max_new_tokens=4, temperature=1.0, seed=3)
+    assert len(seen) == 4
+    root = np.asarray(jax.random.PRNGKey(3))
+    for k in seen:
+        assert not np.array_equal(k, root)
+    assert len({tuple(k.tolist()) for k in seen}) == len(seen)
+
+
 def test_moe_engine_smoke():
     cfg = get_config("granite_moe_1b_a400m").reduced()
     params = lm.init_params(jax.random.PRNGKey(1), cfg)
