@@ -30,18 +30,29 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     Returns (and writes to ``out_path``) ``{name: us_per_call}``.  The
     ``lu_n1024_*`` entries are the tracked fused-vs-blocked wall-time
     comparison; the ``banded_*`` entries track the blocked band megakernel
-    against the legacy scalar kernel and the sequential numpy baseline."""
+    against the legacy scalar kernel and the sequential numpy baseline; the
+    ``opt_*`` entries track the EbV-preconditioned optimizer's grouped
+    batched solves against the per-leaf unrolled jnp reference it replaced.
+
+    Every shootout is also *recorded into the repro.solvers autotune cache*
+    (same keys, same harness), so the committed rows and the registry's
+    dispatch decisions cannot silently disagree — scripts/check.sh asserts
+    the agreement after this runs."""
     import numpy as np
 
     import jax
+    import jax.numpy as jnp
 
     from repro.core import make_diagonally_dominant
     from repro.core.banded import make_banded_dd
     from repro.kernels import ops as kops
+    from repro.solvers import Problem
+    from repro.solvers import cache as scache
     from . import table2_dense
     from .common import emit, numpy_banded_baseline, time_call, time_shootout
 
     rows_us: dict[str, float] = {}
+    tune = scache.get_cache()  # seeded below so BENCH rows and dispatch agree
     for name, secs in table2_dense.run(sizes=[256]).items():
         rows_us[name] = secs * 1e6
     for n in SMOKE_LU_SIZES:
@@ -51,6 +62,8 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
         fns = {impl: functools.partial(lambda impl, a: kops.lu(a, impl=impl), impl)
                for impl in SMOKE_LU_IMPLS}
         times = time_shootout(fns, a, iters=15 if n <= 256 else 5)
+        tune.record(Problem(op="factor", structure="dense", n=n),
+                    {impl: t * 1e6 for impl, t in times.items()})
         for impl, t in times.items():
             rows_us[f"lu_n{n}_{impl}"] = t * 1e6
             emit(f"lu_n{n}_{impl}", t)
@@ -59,7 +72,10 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     arow = make_banded_dd(jax.random.PRNGKey(0), nb, bw)
     fns = {impl: functools.partial(lambda impl, a: kops.banded_lu(a, bw=bw, impl=impl), impl)
            for impl in SMOKE_BANDED_IMPLS}
-    for impl, t in time_shootout(fns, arow, iters=5).items():
+    banded_lu_times = time_shootout(fns, arow, iters=5)
+    tune.record(Problem(op="factor", structure="banded", n=nb, bw=bw),
+                {impl: t * 1e6 for impl, t in banded_lu_times.items()})
+    for impl, t in banded_lu_times.items():
         rows_us[f"banded_lu_n{nb}_{impl}"] = t * 1e6
         emit(f"banded_lu_n{nb}_{impl}", t)
     arow_np = np.asarray(arow, np.float64)
@@ -70,9 +86,49 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     b = jax.random.normal(jax.random.PRNGKey(1), (nb,))
     fns = {impl: functools.partial(lambda impl, l, r: kops.banded_solve(l, r, bw=bw, impl=impl), impl)
            for impl in ("pallas", "xla_scalar")}
-    for impl, t in time_shootout(fns, lub, b, iters=5).items():
+    banded_solve_times = time_shootout(fns, lub, b, iters=5)
+    tune.record(Problem(op="solve", structure="banded", n=nb, bw=bw, rhs=1),
+                {impl: t * 1e6 for impl, t in banded_solve_times.items()})
+    for impl, t in banded_solve_times.items():
         rows_us[f"banded_solve_n{nb}_{impl}"] = t * 1e6
         emit(f"banded_solve_n{nb}_{impl}", t)
+    tune.save()  # dispatch decisions now provably follow the committed rows
+
+    # --- optimizer trajectory: the EbV-preconditioned step on a model of
+    # (128, 128) parameter factors.  `opt_step_d128_registry` is the full
+    # update (grouped batched solves through repro.solvers);
+    # `opt_precond_*` isolates the preconditioner solves — registry batched
+    # dispatch vs the per-leaf unrolled jnp reference the optimizer ran
+    # before the registry rewire.
+    from repro.core.blocked import blocked_lu
+    from repro.core.solve import lu_solve as core_lu_solve
+    from repro.train import optimizer as opt_lib
+
+    d, nleaves = 128, 4
+    params = {f"w{i}": 0.02 * jax.random.normal(jax.random.PRNGKey(10 + i), (d, d))
+              for i in range(nleaves)}
+    grads = {f"w{i}": jax.random.normal(jax.random.PRNGKey(20 + i), (d, d))
+             for i in range(nleaves)}
+    opt = opt_lib.ebv_preconditioned(opt_lib.constant_lr(1e-3))
+    state = opt.init(params)
+    step = jax.jit(lambda g, s, p: opt.update(g, s, p)[0])
+    t = time_call(step, grads, state, params, iters=5)
+    rows_us["opt_step_d128_registry"] = t * 1e6
+    emit("opt_step_d128_registry", t)
+
+    a3 = jnp.stack([make_diagonally_dominant(jax.random.PRNGKey(30 + i), d)
+                    for i in range(nleaves)])
+    r3 = jax.random.normal(jax.random.PRNGKey(40), (nleaves, d, d))
+    fns = {
+        "batched_registry": jax.jit(lambda a, r: kops.linear_solve(a, r)),
+        "unrolled_jnp": jax.jit(lambda a, r: jnp.stack(
+            [core_lu_solve(blocked_lu(a[i], block=d), r[i]) for i in range(nleaves)]
+        )),
+    }
+    for impl, t in time_shootout(fns, a3, r3, iters=5).items():
+        rows_us[f"opt_precond_b{nleaves}_n{d}_{impl}"] = t * 1e6
+        emit(f"opt_precond_b{nleaves}_n{d}_{impl}", t)
+
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_kernels.json")
     with open(out_path, "w") as f:

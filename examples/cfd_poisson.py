@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import banded_lu, banded_solve, to_banded
+from repro.core import to_banded
+from repro.kernels import ops as kops
 
 
 def poisson_2d(nx, ny):
@@ -56,7 +57,10 @@ def main():
 
     bw = nx  # stencil bandwidth
     arow = to_banded(a, bw)
-    solver = jax.jit(lambda ab, b: banded_solve(banded_lu(ab, bw=bw), b, bw=bw))
+    # registry-dispatched factor+solve: the `repro.solvers` auto path picks
+    # the measured-best banded backends (blocked Pallas megakernel / jnp
+    # sweeps) for this shape; pass impl=... to force one.
+    solver = jax.jit(lambda ab, b: kops.banded_linear_solve(ab, b, bw=bw))
     x = solver(arow, b).block_until_ready()
     t0 = time.perf_counter()
     x = solver(arow, b).block_until_ready()

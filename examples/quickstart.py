@@ -35,6 +35,7 @@ def main():
         ("paper-faithful (unblocked bi-vectorized)", lambda: lu_solve(ebv_lu(a), b)),
         ("TPU-adapted (blocked rank-k)", lambda: lu_solve(blocked_lu(a, block=128), b)),
         ("public API linear_solve", lambda: linear_solve(a, b, method="ebv_blocked")),
+        ("registry auto (repro.solvers)", lambda: linear_solve(a, b, method="auto")),
         ("jnp.linalg.solve (reference)", lambda: jnp.linalg.solve(a, b)),
     ]:
         jitted = jax.jit(fn)

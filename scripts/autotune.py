@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Autotune sweep: measure every autotune-flagged backend per problem shape
+and persist the timings to the solvers cache.
+
+Uses the same round-robin ``time_shootout`` harness as the smoke bench
+(:mod:`benchmarks.common`), so the cache and ``BENCH_kernels.json`` can
+never disagree about who won a shootout.  The cache path follows
+``repro.solvers.cache`` resolution (``$REPRO_SOLVERS_CACHE`` >
+``~/.cache/repro_solvers.json``) unless ``--out`` overrides it.
+
+    python scripts/autotune.py --smoke            # CI: small sizes, seconds
+    python scripts/autotune.py                    # default grid
+    python scripts/autotune.py --full             # paper-scale sizes (slow)
+
+Smoke sizes and the 4x nearest-size transfer window are chosen together so
+that a seeded cache can never flip the *observable* behaviour the unit
+tests assert at toy sizes: the banded sweep (n=2048) stays > 4x above every
+banded test order (n ≤ 200) because the banded solve candidates are NOT
+value-identical; the dense sweeps (n=256/512) may transfer into test sizes,
+but the dense-factor autotune candidates are bitwise twins
+(``pallas_fused`` ↔ ``xla``) and no test asserts dispatch counts or exact
+values on a default-impl dense solve.  Tests that do assert static dispatch
+(optimizer, batched routing) pin an empty cache explicitly.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def _problem_grid(level: str):
+    """(problem, kwargs) pairs to sweep.  ``kwargs`` are the backend-call
+    kwargs (bw for banded slots)."""
+    from repro.solvers import Problem
+
+    if level == "smoke":
+        dense_factor_ns = [256]
+        dense_solve_ns = [512]
+        banded = [(2048, 8)]
+        batched = [(8, 128)]
+    elif level == "full":
+        dense_factor_ns = [256, 1024, 2048]
+        dense_solve_ns = [512, 2048, 4096]
+        banded = [(2048, 8), (16384, 16)]
+        batched = [(8, 128), (32, 256)]
+    else:  # default
+        dense_factor_ns = [256, 1024]
+        dense_solve_ns = [512, 2048]
+        banded = [(2048, 8)]
+        batched = [(8, 128)]
+
+    grid = []
+    for n in dense_factor_ns:
+        grid.append(Problem(op="factor", structure="dense", n=n))
+    for n in dense_solve_ns:
+        grid.append(Problem(op="solve", structure="dense", n=n, rhs=8))
+    for n, bw in banded:
+        grid.append(Problem(op="factor", structure="banded", n=n, bw=bw))
+        grid.append(Problem(op="solve", structure="banded", n=n, bw=bw, rhs=1))
+    for b, n in batched:
+        grid.append(Problem(op="factor", structure="batched_dense", n=n, batch=b))
+        grid.append(Problem(op="solve", structure="batched_dense", n=n, batch=b, rhs=n))
+    return grid
+
+
+def _operands(problem):
+    """Build concrete operand arrays for a problem (factored inputs for the
+    solve ops come from the slot's pure-jnp reference backend)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import make_diagonally_dominant
+    from repro.core.banded import make_banded_dd
+    from repro.solvers import Problem, get_backend
+
+    key = jax.random.PRNGKey(problem.n)
+    if problem.structure == "dense":
+        a = make_diagonally_dominant(key, problem.n)
+    elif problem.structure == "banded":
+        a = make_banded_dd(key, problem.n, problem.bw)
+    elif problem.structure == "batched_dense":
+        a = jnp.stack([
+            make_diagonally_dominant(jax.random.PRNGKey(i), problem.n)
+            for i in range(problem.batch)
+        ])
+    else:  # batched_banded
+        a = jnp.stack([
+            make_banded_dd(jax.random.PRNGKey(i), problem.n, problem.bw)
+            for i in range(problem.batch)
+        ])
+    if problem.op == "factor":
+        return (a,)
+    fp = Problem(op="factor", structure=problem.structure, n=problem.n,
+                 dtype=problem.dtype, bw=problem.bw, batch=problem.batch)
+    lu = get_backend("factor", problem.structure, "xla").call(fp, a, bw=problem.bw)
+    shape = ((problem.batch,) if problem.batched else ()) + (problem.n,)
+    if problem.rhs > 1:
+        shape = shape + (problem.rhs,)  # rhs == 1 stays a vector RHS
+    b = jax.random.normal(jax.random.PRNGKey(1), shape)
+    return (lu, b)
+
+
+def run(level: str, out: str | None, iters: int) -> dict:
+    import jax
+
+    from benchmarks.common import time_shootout
+    from repro.solvers import candidates
+    from repro.solvers.cache import AutotuneCache, cache_path
+
+    path = out or cache_path()
+    cache = AutotuneCache.load(path)
+    measured = {}
+    for problem in _problem_grid(level):
+        cands = [b for b in candidates(problem) if b.autotune]
+        if len(cands) < 2:
+            continue
+        arrays = _operands(problem)
+        fns = {
+            b.name: functools.partial(b.call, problem, bw=problem.bw)
+            for b in cands
+        }
+        times = time_shootout(fns, *arrays, iters=iters)
+        times_us = {name: t * 1e6 for name, t in times.items()}
+        cache.record(problem, times_us)
+        winner = min(times_us, key=times_us.get)
+        measured[problem] = times_us
+        print(
+            f"{problem.op}/{problem.structure} n={problem.n} bw={problem.bw} "
+            f"batch={problem.batch}: "
+            + "  ".join(f"{k}={v:,.0f}us" for k, v in sorted(times_us.items()))
+            + f"  -> {winner}"
+        )
+    cache.save(path)
+    print(f"wrote {len(cache.entries)} entries to {path}", file=sys.stderr)
+    return measured
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="small sizes (CI stage)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
+    ap.add_argument("--out", default=None, help="cache file (default: resolved cache path)")
+    ap.add_argument("--iters", type=int, default=5, help="shootout samples per backend")
+    args = ap.parse_args()
+    level = "smoke" if args.smoke else ("full" if args.full else "default")
+    run(level, args.out, args.iters)
+
+
+if __name__ == "__main__":
+    main()

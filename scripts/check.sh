@@ -1,24 +1,68 @@
 #!/usr/bin/env bash
-# Tier-1 verification in one command (ROADMAP.md).  Runs the full test
-# suite from the repo root, then the perf smoke (benchmarks/run.py --smoke,
-# which writes BENCH_kernels.json for the cross-PR perf trajectory).
+# Tier-1 verification in one command (ROADMAP.md):
+#   1. autotune smoke (scripts/autotune.py --smoke) — writes the measured
+#      solver cache the test run dispatches against ($REPRO_SOLVERS_CACHE,
+#      defaulting to the repo-local .autotune_cache.json that
+#      tests/conftest.py also pins);
+#   2. the full test suite;
+#   3. the perf smoke (benchmarks/run.py --smoke → BENCH_kernels.json),
+#      followed by a bench/dispatch consistency assert (the registry's auto
+#      choice for the banded solve must equal the measured BENCH winner) and
+#      the cross-PR perf gate (scripts/perf_compare.py --bench: fail on
+#      >1.5x regression of any key present in the previous snapshot).
 # tests/conftest.py forces the deterministic 8-host-device XLA environment.
 # Extra pytest args pass through:
 #
 #     scripts/check.sh                 # everything
 #     scripts/check.sh tests/test_distributed.py -k lu
 #     SKIP_SMOKE=1 scripts/check.sh    # tests only
+#     SKIP_AUTOTUNE=1 scripts/check.sh # skip the cache-seeding stage
 set -euo pipefail
 cd "$(dirname "$0")/.."
+export REPRO_SOLVERS_CACHE="${REPRO_SOLVERS_CACHE:-$PWD/.autotune_cache.json}"
+if [[ "${SKIP_AUTOTUNE:-0}" != "1" ]]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/autotune.py --smoke
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
+    prev_bench=""
+    if [[ -f BENCH_kernels.json ]]; then
+        prev_bench="$(mktemp /tmp/BENCH_prev.XXXXXX.json)"
+        trap 'rm -f "$prev_bench"' EXIT
+        cp BENCH_kernels.json "$prev_bench"
+    fi
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run --smoke
-    # the smoke bench must land the sparse trajectory: banded_* rows present
-    python - <<'EOF'
+    # the smoke bench must land the sparse trajectory (banded_* rows), the
+    # optimizer trajectory (opt_* rows), and the dispatch decisions must
+    # agree with the measured rows it just wrote
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
 import json
 rows = json.load(open("BENCH_kernels.json"))
 banded = sorted(k for k in rows if k.startswith("banded_"))
 assert banded, "smoke bench wrote no banded_* rows to BENCH_kernels.json"
 print(f"banded rows present: {len(banded)} ({', '.join(banded)})")
+opt = sorted(k for k in rows if k.startswith("opt_"))
+assert opt, "smoke bench wrote no opt_* (optimizer) rows to BENCH_kernels.json"
+print(f"optimizer rows present: {len(opt)} ({', '.join(opt)})")
+
+# bench/dispatch consistency: the registry auto pick for the smoke banded
+# solve shape must be the backend the bench just measured as fastest
+from benchmarks.run import SMOKE_BANDED_N, SMOKE_BANDED_BW
+from repro.solvers import Problem, select
+prefix = f"banded_solve_n{SMOKE_BANDED_N}_"
+measured = {k[len(prefix):]: v for k, v in rows.items() if k.startswith(prefix)}
+winner = min(measured, key=measured.get)
+picked = select(Problem(op="solve", structure="banded",
+                        n=SMOKE_BANDED_N, bw=SMOKE_BANDED_BW, rhs=1)).name
+assert picked == winner, (
+    f"banded_solve auto dispatch ({picked}) disagrees with the measured "
+    f"BENCH winner ({winner}): {measured}")
+print(f"banded_solve auto dispatch == measured winner: {winner}")
 EOF
+    if [[ -n "$prev_bench" ]]; then
+        # PERF_MAX_RATIO loosens the gate when a snapshot was taken under
+        # visibly different host load (interpret-mode timings drift)
+        python scripts/perf_compare.py --bench "$prev_bench" BENCH_kernels.json \
+            --max-ratio "${PERF_MAX_RATIO:-1.5}"
+    fi
 fi

@@ -1,10 +1,18 @@
-"""Compare dry-run artifact sets (§Perf before/after tables).
+"""Compare dry-run artifact sets (§Perf before/after tables) and
+BENCH_kernels.json snapshots (the cross-PR kernel-perf gate).
 
     python scripts/perf_compare.py artifacts/dryrun_v0_baseline artifacts/dryrun [--mesh single] [--cells a__b ...]
+    python scripts/perf_compare.py --bench BENCH_prev.json BENCH_kernels.json [--max-ratio 1.5]
+
+``--bench`` mode compares the ``name -> us_per_call`` rows of two smoke-bench
+snapshots and **exits non-zero** when any key present in the previous file
+regressed by more than ``--max-ratio`` (keys only in one file are reported
+but never fail — new benches must be addable without tripping the gate).
 """
 import argparse
 import json
 import os
+import sys
 
 from_dir = None
 
@@ -33,13 +41,49 @@ def terms(r):
     }
 
 
+def bench_compare(before_path: str, after_path: str, max_ratio: float) -> int:
+    with open(before_path) as f:
+        before = json.load(f)
+    with open(after_path) as f:
+        after = json.load(f)
+    regressions = []
+    print(f"| bench | before us | after us | ratio |")
+    print(f"|---|---|---|---|")
+    for k in sorted(before):
+        if k not in after:
+            print(f"| {k} | {before[k]:.1f} | (dropped) | – |")
+            continue
+        ratio = after[k] / before[k] if before[k] else float("inf")
+        flag = "  <-- REGRESSION" if ratio > max_ratio else ""
+        print(f"| {k} | {before[k]:.1f} | {after[k]:.1f} | {ratio:.2f}x |{flag}")
+        if ratio > max_ratio:
+            regressions.append((k, ratio))
+    for k in sorted(set(after) - set(before)):
+        print(f"| {k} | (new) | {after[k]:.1f} | – |")
+    if regressions:
+        print(
+            f"FAIL: {len(regressions)} bench(es) regressed past {max_ratio}x: "
+            + ", ".join(f"{k} ({r:.2f}x)" for k, r in regressions),
+            file=sys.stderr,
+        )
+        return 1
+    print(f"OK: no key regressed past {max_ratio}x", file=sys.stderr)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("before")
     ap.add_argument("after")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--cells", nargs="*", default=None)
+    ap.add_argument("--bench", action="store_true",
+                    help="before/after are BENCH_kernels.json snapshots")
+    ap.add_argument("--max-ratio", type=float, default=1.5,
+                    help="--bench: fail when any shared key slows past this ratio")
     args = ap.parse_args()
+    if args.bench:
+        sys.exit(bench_compare(args.before, args.after, args.max_ratio))
     b = load(args.before, args.mesh)
     a = load(args.after, args.mesh)
     keys = args.cells or sorted(set(b) & set(a))

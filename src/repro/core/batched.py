@@ -20,7 +20,19 @@ batched_lu_solve = jax.vmap(lu_solve)
 
 @functools.partial(jax.jit, static_argnames=("method", "block"))
 def batched_linear_solve(a: jax.Array, b: jax.Array, *, method: str = "ebv", block: int = 128) -> jax.Array:
-    """Solve a batch of diagonally-dominant systems ``a[i] x[i] = b[i]``."""
+    """Solve a batch of diagonally-dominant systems ``a[i] x[i] = b[i]``.
+
+    ``method="auto"`` routes through the ``repro.solvers`` registry
+    (capability filter → measured cache → static heuristics), which lands on
+    the batched Pallas grid kernels for small fp32 systems; the named
+    methods keep their historical vmapped-jnp meaning."""
+    if method == "auto":
+        from repro.kernels import ops as kops  # deferred: kernels imports core
+
+        squeeze = b.ndim == 2  # (B, n) vector RHS per system
+        bm = b[..., None] if squeeze else b
+        x = kops.linear_solve(a, bm, block=block)
+        return x[..., 0] if squeeze else x
     if method == "ebv":
         lu = batched_ebv_lu(a)
     elif method == "ebv_blocked":

@@ -212,8 +212,12 @@ def fused_lu_steps(a: jax.Array, *, block: int, num_steps: int) -> jax.Array:
             w = B - j - C2
 
             # (1) bi-vectorized factorization of the diagonal-block strip
+            # (dynamic_update_slice, not .at[].set: when the strip covers the
+            # whole array — S == 1 and C2 == B, i.e. n ≤ 32 — the full-slice
+            # scatter lowers with an empty int32[0] index constant that the
+            # Pallas kernel tracer rejects as a captured constant)
             diag = factor_diag_strip(a[base : base + B, r0 : r0 + C2], j)
-            a = a.at[base : base + B, r0 : r0 + C2].set(diag)
+            a = jax.lax.dynamic_update_slice(a, diag, (base, r0))
 
             # (2) unit-lower trsm: U rows of the strip vs the remaining cols
             if w:

@@ -90,7 +90,14 @@ def linear_solve(a: jax.Array, b: jax.Array, *, method: str = "ebv_blocked", blo
       * ``"ebv"``          — paper-faithful unblocked bi-vectorized LU.
       * ``"ebv_blocked"``  — TPU-adapted blocked (rank-k) EbV LU.
       * ``"jnp"``          — ``jnp.linalg.solve`` (cross-check baseline).
+      * ``"auto"``         — the ``repro.solvers`` registry (measured cache
+                             → static heuristics; lands on the Pallas
+                             kernels, incl. batched inputs).
     """
+    if method == "auto":
+        from repro.kernels import ops as _kops  # deferred: kernels imports core
+
+        return _kops.linear_solve(a, b, block=block)
     if method == "jnp":
         return jnp.linalg.solve(a, b)
     if method == "ebv":

@@ -1,60 +1,54 @@
-"""Jit'd public wrappers over the Pallas kernels.
+"""Public solver ops — a thin compatibility shim over ``repro.solvers``.
 
-``lu`` impl dispatch:
-  * ``"pallas_fused"``   — DEFAULT: single-dispatch EbV LU megakernel — one
-                           ``pallas_call`` for the whole factorization, matrix
-                           carried in place in HBM (see
-                           :func:`repro.kernels.ebv_lu.lu_fused`; small
-                           matrices run its VMEM-resident variant).  Non-fp32
-                           inputs fall back to the op-identical ``"xla"``
-                           mirror with a one-time warning naming the dtype.
-  * ``"pallas_blocked"`` — legacy multi-launch blocked driver: one panel
-                           kernel + one fused bi-vector step kernel per block
-                           column (kept as the fallback/baseline; see
-                           README.md for the launch/traffic comparison).
-  * ``"pallas_vmem"``    — whole-matrix VMEM kernel (n ≲ 4096 fp32).
-  * ``"xla"``            — pure-jnp mirror of the fused driver
-                           (:func:`repro.core.blocked.fused_blocked_lu`):
-                           identical op shapes/ordering, bitwise-identical
-                           output — the transparent reference.
+Every call builds a :class:`repro.solvers.Problem` from its array arguments
+and routes through the registry's selection engine
+(:func:`repro.solvers.select`): capability filter → measured autotune cache
+(``scripts/autotune.py`` / the smoke bench) → static heuristics that
+reproduce the historical hardcoded dispatch.  The ``impl=`` kwarg is kept
+as a **forced-backend override** — every historical name still routes to
+the same implementation:
 
-``lu_solve`` impl dispatch:
-  * ``"pallas"``         — DEFAULT: auto — ``solve_vmem`` while the packed LU
-                           fits VMEM comfortably, ``solve_tiled`` beyond.
-  * ``"pallas_vmem"`` / ``"pallas_tiled"`` — force either driver.
-  * ``"xla"``            — pure-jnp substitution from :mod:`repro.core`.
+``lu``: ``"pallas_fused"`` (single-dispatch EbV megakernel, fp32; non-fp32
+falls back to the op-identical ``"xla"`` mirror with a one-time warning),
+``"pallas_blocked"`` (legacy multi-launch driver), ``"pallas_vmem"``,
+``"xla"`` (bitwise mirror).  ``impl=None`` (the default) is the registry
+auto path; with no cache it picks ``"pallas_fused"`` for fp32 — exactly the
+old default.
 
-``banded_lu`` impl dispatch (band row-aligned, see :mod:`repro.core.banded`):
-  * ``"pallas"``         — DEFAULT: auto — the VMEM blocked megakernel while
-                           the padded band fits VMEM, the HBM-streaming tiled
-                           kernel beyond.
-  * ``"pallas_blocked"`` / ``"pallas_tiled"`` — force either blocked driver.
-  * ``"pallas_scalar"``  — legacy scalar-sequential kernel (n−1 rank-1 steps).
-  * ``"xla"``            — pure-jnp mirror of the blocked kernels
-                           (:func:`repro.core.banded.banded_lu_blocked`),
-                           bitwise-identical to both.
-  * ``"xla_scalar"``     — legacy scalar jnp loop.
+``lu_solve``: ``"pallas_vmem"`` / ``"pallas_tiled"`` / ``"xla"`` forced;
+``"pallas"`` = auto restricted to the Pallas drivers (the old meaning);
+``None`` = full auto (old threshold: VMEM ≤ 2048, tiled beyond).
 
-``banded_solve`` mirrors the table: ``"pallas"`` (blocked kernel), ``"xla"``
-(blocked mirror), ``"xla_scalar"`` (scalar jnp loop).
+``banded_lu``: ``"pallas_blocked"`` / ``"pallas_tiled"`` / ``"pallas_scalar"``
+/ ``"xla"`` / ``"xla_scalar"`` forced; ``"pallas"`` = Pallas-only auto (the
+old 6 MB skewed-band VMEM rule); ``None`` = full auto.
 
-On CPU (this container) the Pallas paths run in interpret mode automatically;
-on TPU they lower to Mosaic.
+``banded_solve``: ``"pallas"`` (blocked kernel) / ``"xla"`` (blocked mirror)
+/ ``"xla_scalar"`` forced; ``None`` = auto — statically the blocked kernel,
+but the smoke bench seeds the cache with the measured shootout
+(``BENCH_kernels.json``), so on this container the auto path picks the
+measured winner (``xla_scalar`` at n=16384) instead of losing 3.4x to it.
+
+Batching: a leading batch axis on the matrix operand — or ``jax.vmap`` over
+these ops — reroutes to the batched grid kernels
+(:mod:`repro.kernels.batched_lu`, ``batched_banded_*_vmem``) instead of
+unrolling per-sample kernels.
+
+Multi-device: ``lu(a, mesh=mesh)`` / ``linear_solve(a, b, mesh=mesh)``
+dispatch to the shard_map EbV LU (:mod:`repro.core.distributed`) via the
+registry's ``devices > 1`` capability slot.
+
+On CPU (this container) the Pallas paths run in interpret mode
+automatically; on TPU they lower to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 import warnings
+
+import importlib
 
 import jax
 import jax.numpy as jnp
-
-from repro.core import blocked as _core_blocked
-from repro.core import solve as _core_solve
-from repro.core import banded as _core_banded
-from . import ebv_lu as _k
-from . import trsm as _trsm
-from . import banded as _kbanded
 
 __all__ = [
     "lu",
@@ -65,14 +59,21 @@ __all__ = [
     "banded_linear_solve",
 ]
 
-# Above this order the packed (n, n) LU no longer comfortably shares VMEM
-# with an RHS tile, so the auto solve dispatch switches to the tiled driver.
-_SOLVE_VMEM_MAX_N = 2048
 
-# Above this many skewed-band bytes the auto banded dispatch switches from
-# the VMEM-resident blocked kernel to the HBM-streaming tiled kernel (the
-# VMEM kernel holds the skewed band twice — in and out — on real TPUs).
-_BANDED_VMEM_MAX_BYTES = 6 * 2**20
+def _sol():
+    """Deferred import of the registry: ``repro.solvers.backends`` imports
+    this module's siblings, so a module-level import here would cycle."""
+    return importlib.import_module("repro.solvers")
+
+
+def __getattr__(name: str):
+    # Backward-compatible re-exports of the static thresholds, whose home is
+    # now repro.solvers.backends (deferred for the same cycle reason).
+    if name == "_SOLVE_VMEM_MAX_N":
+        return _sol().backends.SOLVE_VMEM_MAX_N
+    if name == "_BANDED_VMEM_MAX_BYTES":
+        return _sol().backends.BANDED_VMEM_MAX_BYTES
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 _FUSED_FALLBACK_WARNED: set[str] = set()
 
@@ -92,159 +93,284 @@ def _warn_fused_dtype_fallback(dtype) -> None:
         )
 
 
-def _pallas_blocked_lu(a: jax.Array, *, block: int, col_tile: int, interpret: bool | None) -> jax.Array:
-    n = a.shape[-1]
-    block = min(block, n)
-    for k0 in range(0, n, block):
-        b = min(block, n - k0)
-        pan = _k.panel(a[k0:, k0 : k0 + b], interpret=interpret)
-        a = a.at[k0:, k0 : k0 + b].set(pan)
-        w = n - k0 - b
-        if w > 0:
-            ct = min(col_tile, w)
-            if w % ct:
-                # Pad the trailing width to the next tile multiple (tiles
-                # capped at 128 lanes) instead of halving the tile — odd
-                # widths used to degrade to 1-column tiles.  Zero columns are
-                # inert through trsm and the rank-b update.
-                ct = min(col_tile, 128)
-                wp = -(-w // ct) * ct
-                top = jnp.pad(a[k0 : k0 + b, k0 + b :], ((0, 0), (0, wp - w)))
-                trail = jnp.pad(a[k0 + b :, k0 + b :], ((0, 0), (0, wp - w)))
-                u12, new_trail = _k.fused_step(pan, top, trail, col_tile=ct, interpret=interpret)
-                u12, new_trail = u12[:, :w], new_trail[:, :w]
-            else:
-                u12, new_trail = _k.fused_step(
-                    pan, a[k0 : k0 + b, k0 + b :], a[k0 + b :, k0 + b :],
-                    col_tile=ct, interpret=interpret,
-                )
-            a = a.at[k0 : k0 + b, k0 + b :].set(u12)
-            a = a.at[k0 + b :, k0 + b :].set(new_trail)
-    return a
+def _banded_auto_impl(n: int, bw: int, block: int | None, itemsize: int) -> str:
+    """Historical banded auto rule (kept for callers/tests; the registry's
+    static priorities encode the same threshold)."""
+    return _sol().backends.banded_static_impl(n, bw, block, itemsize)
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "block", "col_tile", "interpret"))
-def lu(
-    a: jax.Array,
-    *,
-    impl: str = "pallas_fused",
-    block: int = 256,
-    col_tile: int = 256,
-    interpret: bool | None = None,
-) -> jax.Array:
-    """Packed EbV LU factorization (no pivoting — paper contract)."""
-    if impl == "pallas_fused":
-        if a.dtype == jnp.float32:
-            return _k.lu_fused(a, block=block, interpret=interpret)
+def _batched_impl(op: str, structure: str, impl: str | None) -> str | None:
+    """Map an unbatched impl name to its batched analog (Pallas names →
+    the batched VMEM grid kernel, xla names → the vmapped mirror), after
+    validating the name against the unbatched slot."""
+    if impl is None:
+        return None
+    if impl != "pallas":  # legacy auto alias has no unbatched backend record
+        _sol().get_backend(op, structure, impl)  # raises "unknown impl ..."
+    return "xla" if impl.startswith("xla") else "pallas_vmem"
+
+
+def _with_batch_rule(unbatched_fn, batched_fn):
+    """Wrap ``unbatched_fn`` so ``jax.vmap`` reroutes to ``batched_fn``
+    (one batched grid kernel) instead of unrolling/lifting the unbatched
+    kernels.  Unbatched operands are broadcast along the batch axis."""
+    inner = jax.custom_batching.custom_vmap(unbatched_fn)
+
+    @inner.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        args = tuple(
+            a if batched else jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+            for a, batched in zip(args, in_batched)
+        )
+        return batched_fn(*args), True
+
+    return inner
+
+
+# ---------------------------------------------------------------------------
+# dense LU
+# ---------------------------------------------------------------------------
+def _lu_2d(a: jax.Array, *, impl, block, col_tile, interpret) -> jax.Array:
+    if impl in (None, "pallas_fused") and a.dtype != jnp.float32:
         # The fused kernel is fp32-only.  Fall back to its bitwise mirror
         # (as fast as fused at n=1024 per BENCH_kernels.json) rather than
         # the ~9x-slower multi-launch blocked driver.
         _warn_fused_dtype_fallback(a.dtype)
         impl = "xla"
-    if impl == "pallas_vmem":
-        return _k.lu_vmem(a, interpret=interpret)
-    if impl == "pallas_blocked":
-        return _pallas_blocked_lu(a, block=block, col_tile=col_tile, interpret=interpret)
-    if impl == "xla":
-        return _core_blocked.fused_blocked_lu(a, block=block)
-    raise ValueError(f"unknown impl {impl!r}")
+    problem = _sol().Problem.from_arrays("factor", a)
+    return _sol().dispatch(
+        problem, a, impl=impl, block=block, col_tile=col_tile, interpret=interpret
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("impl", "block", "rhs_tile", "interpret"))
+def _lu_batched(a: jax.Array, *, impl, block, interpret) -> jax.Array:
+    problem = _sol().Problem.from_arrays("factor", a)
+    return _sol().dispatch(
+        problem, a, impl=_batched_impl("factor", "dense", impl),
+        block=block, interpret=interpret,
+    )
+
+
+def lu(
+    a: jax.Array,
+    *,
+    impl: str | None = None,
+    block: int = 256,
+    col_tile: int = 256,
+    interpret: bool | None = None,
+    mesh=None,
+    mesh_axis: str = "model",
+    placement: str = "ebv_folded",
+) -> jax.Array:
+    """Packed EbV LU factorization (no pivoting — paper contract).
+
+    2-D input → dense backends; a leading batch axis (or ``jax.vmap``) →
+    the batched grid kernels; ``mesh=`` → the multi-chip shard_map LU."""
+    if mesh is not None and mesh.shape[mesh_axis] > 1:
+        if impl not in (None, "distributed"):
+            raise ValueError(
+                f"impl={impl!r} is a single-device backend and cannot honour "
+                "mesh=; only 'distributed' spans devices (drop mesh= or impl=)"
+            )
+        problem = _sol().Problem.from_arrays("factor", a, devices=mesh.shape[mesh_axis])
+        return _sol().dispatch(
+            problem, a, impl=impl, mesh=mesh, axis=mesh_axis,
+            block=block, placement=placement, interpret=interpret,
+        )
+    if a.ndim >= 3:
+        lead, tail = a.shape[:-2], a.shape[-2:]
+        out = _lu_batched(a.reshape((-1,) + tail), impl=impl, block=block, interpret=interpret)
+        return out.reshape(lead + tail)
+
+    return _with_batch_rule(
+        lambda x: _lu_2d(x, impl=impl, block=block, col_tile=col_tile, interpret=interpret),
+        lambda xs: _lu_batched(xs, impl=impl, block=block, interpret=interpret),
+    )(a)
+
+
+# ---------------------------------------------------------------------------
+# substitution (solve) on packed factors
+# ---------------------------------------------------------------------------
+def _lu_solve_2d(lu_packed, b, *, impl, block, rhs_tile, interpret):
+    problem = _sol().Problem.from_arrays("solve", lu_packed, b)
+    allow = None
+    if impl == "pallas":  # old meaning: auto restricted to the Pallas drivers
+        impl, allow = None, lambda be: be.name.startswith("pallas")
+    return _sol().dispatch(
+        problem, lu_packed, b, impl=impl, allow=allow,
+        block=block, rhs_tile=rhs_tile, interpret=interpret,
+    )
+
+
+def _lu_solve_batched(lu_packed, b, *, impl, block, interpret):
+    squeeze = b.ndim == 2  # (B, n) vector RHS
+    bm = b[..., None] if squeeze else b
+    problem = _sol().Problem.from_arrays("solve", lu_packed, bm)
+    x = _sol().dispatch(
+        problem, lu_packed, bm, impl=_batched_impl("solve", "dense", impl),
+        block=block, interpret=interpret,
+    )
+    return x[..., 0] if squeeze else x
+
+
 def lu_solve(
     lu_packed: jax.Array,
     b: jax.Array,
     *,
-    impl: str = "pallas",
+    impl: str | None = None,
     block: int = 256,
     rhs_tile: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
-    n = lu_packed.shape[-1]
-    if impl == "pallas":
-        impl = "pallas_vmem" if n <= _SOLVE_VMEM_MAX_N else "pallas_tiled"
-    if impl == "pallas_vmem":
-        return _trsm.solve_vmem(lu_packed, b, rhs_tile=rhs_tile, interpret=interpret)
-    if impl == "pallas_tiled":
-        return _trsm.solve_tiled(lu_packed, b, block=block, rhs_tile=rhs_tile, interpret=interpret)
-    if impl == "xla":
-        return _core_solve.lu_solve(lu_packed, b)
-    raise ValueError(f"unknown impl {impl!r}")
+    if lu_packed.ndim >= 3:
+        if lu_packed.ndim > 3:  # fold extra leading batch dims, like lu()
+            lead, tail = lu_packed.shape[:-2], lu_packed.shape[-2:]
+            bf = b.reshape((-1,) + b.shape[len(lead):])
+            x = _lu_solve_batched(
+                lu_packed.reshape((-1,) + tail), bf,
+                impl=impl, block=block, interpret=interpret,
+            )
+            return x.reshape(lead + x.shape[1:])
+        return _lu_solve_batched(lu_packed, b, impl=impl, block=block, interpret=interpret)
+    return _with_batch_rule(
+        lambda l, r: _lu_solve_2d(l, r, impl=impl, block=block, rhs_tile=rhs_tile, interpret=interpret),
+        lambda ls, rs: _lu_solve_batched(ls, rs, impl=impl, block=block, interpret=interpret),
+    )(lu_packed, b)
 
 
-def linear_solve(a: jax.Array, b: jax.Array, *, solve_impl: str | None = None, **kw) -> jax.Array:
+def linear_solve(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    solve_impl: str | None = None,
+    mesh=None,
+    mesh_axis: str = "model",
+    placement: str = "ebv_folded",
+    **kw,
+) -> jax.Array:
     """Factor + solve.  ``impl`` routes BOTH phases: the factor phase gets it
     verbatim; the solve phase runs ``"xla"`` when the factor does and the
     Pallas auto driver otherwise (``impl="xla"`` used to silently solve with
     the default Pallas path).  Pass ``solve_impl`` to mix phases
-    deliberately (any :func:`lu_solve` impl name)."""
+    deliberately (any :func:`lu_solve` impl name).  With ``mesh=`` the whole
+    factor+substitution pipeline runs distributed
+    (:func:`repro.core.distributed.distributed_lu_solve`)."""
+    if mesh is not None and mesh.shape[mesh_axis] > 1:
+        if kw.get("impl") not in (None, "distributed"):
+            raise ValueError(
+                f"impl={kw['impl']!r} is a single-device backend and cannot "
+                "honour mesh=; only 'distributed' spans devices"
+            )
+        problem = _sol().Problem.from_arrays(
+            "linear_solve", a, b, devices=mesh.shape[mesh_axis]
+        )
+        return _sol().dispatch(
+            problem, a, b, impl=kw.get("impl"), mesh=mesh, axis=mesh_axis,
+            block=kw.get("block", 64), placement=placement,
+            interpret=kw.get("interpret"),
+        )
     lu_kw = {k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}
     solve_kw = {k: v for k, v in kw.items() if k in ("block", "rhs_tile", "interpret")}
-    if solve_impl is None and "impl" in kw:
+    if solve_impl is None and kw.get("impl") is not None:
         solve_impl = "xla" if kw["impl"] == "xla" else "pallas"
     if solve_impl is not None:
         solve_kw["impl"] = solve_impl
     return lu_solve(lu(a, **lu_kw), b, **solve_kw)
 
 
-def _banded_auto_impl(n: int, bw: int, block: int | None, itemsize: int) -> str:
-    c = _core_banded.band_block_size(n, bw, block)
-    skew_bytes = _core_banded.skew_rows(n, bw, c) * (c + 2 * bw) * itemsize
-    return "pallas_blocked" if skew_bytes <= _BANDED_VMEM_MAX_BYTES else "pallas_tiled"
+# ---------------------------------------------------------------------------
+# banded (row-aligned band, see repro.core.banded)
+# ---------------------------------------------------------------------------
+def _banded_lu_2d(arow, *, bw, impl, block, interpret):
+    problem = _sol().Problem.from_arrays("factor", arow, bw=bw)
+    allow = None
+    if impl == "pallas":  # old meaning: Pallas-only auto (6 MB VMEM rule)
+        impl, allow = None, lambda be: be.name in ("pallas_blocked", "pallas_tiled")
+    return _sol().dispatch(
+        problem, arow, impl=impl, allow=allow, bw=bw, block=block, interpret=interpret
+    )
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "impl", "block", "interpret"))
+def _banded_lu_batched(arow, *, bw, impl, block, interpret):
+    problem = _sol().Problem.from_arrays("factor", arow, bw=bw)
+    return _sol().dispatch(
+        problem, arow, impl=_batched_impl("factor", "banded", impl),
+        bw=bw, block=block, interpret=interpret,
+    )
+
+
 def banded_lu(
     arow: jax.Array,
     *,
     bw: int,
-    impl: str = "pallas",
+    impl: str | None = None,
     block: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Packed band LU on the row-aligned band (no pivoting)."""
-    if impl == "pallas":
-        impl = _banded_auto_impl(arow.shape[0], bw, block, jnp.dtype(arow.dtype).itemsize)
-    if impl == "pallas_blocked":
-        return _kbanded.banded_lu_blocked(arow, bw=bw, block=block, interpret=interpret)
-    if impl == "pallas_tiled":
-        return _kbanded.banded_lu_tiled(arow, bw=bw, block=block, interpret=interpret)
-    if impl == "pallas_scalar":
-        return _kbanded.banded_lu_kernelized(arow, bw=bw, interpret=interpret)
-    if impl == "xla":
-        return _core_banded.banded_lu_blocked(arow, bw=bw, block=block)
-    if impl == "xla_scalar":
-        return _core_banded.banded_lu(arow, bw=bw)
-    raise ValueError(f"unknown impl {impl!r}")
+    if arow.ndim >= 3:
+        lead, tail = arow.shape[:-2], arow.shape[-2:]
+        out = _banded_lu_batched(
+            arow.reshape((-1,) + tail), bw=bw, impl=impl, block=block, interpret=interpret
+        )
+        return out.reshape(lead + out.shape[1:])
+    return _with_batch_rule(
+        lambda x: _banded_lu_2d(x, bw=bw, impl=impl, block=block, interpret=interpret),
+        lambda xs: _banded_lu_batched(xs, bw=bw, impl=impl, block=block, interpret=interpret),
+    )(arow)
 
 
-@functools.partial(jax.jit, static_argnames=("bw", "impl", "block", "rhs_tile", "interpret"))
+def _banded_solve_2d(lu_band, b, *, bw, impl, block, rhs_tile, interpret):
+    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw)
+    return _sol().dispatch(
+        problem, lu_band, b, impl=impl,
+        bw=bw, block=block, rhs_tile=rhs_tile, interpret=interpret,
+    )
+
+
+def _banded_solve_batched(lu_band, b, *, bw, impl, block, interpret):
+    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw)
+    return _sol().dispatch(
+        problem, lu_band, b, impl=_batched_impl("solve", "banded", impl),
+        bw=bw, block=block, interpret=interpret,
+    )
+
+
 def banded_solve(
     lu_band: jax.Array,
     b: jax.Array,
     *,
     bw: int,
-    impl: str = "pallas",
+    impl: str | None = None,
     block: int | None = None,
     rhs_tile: int = 256,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Forward+backward substitution on packed band factors.
 
-    The default targets TPU residency (single-dispatch blocked kernel,
-    factors streamed strip-by-strip from HBM); on this CPU container the
-    interpret-mode DMA emulation makes ``impl="xla_scalar"`` the faster
-    choice for one-off solves — see ``BENCH_kernels.json``
-    (``banded_solve_n16384_*``)."""
-    if impl == "pallas":
-        return _kbanded.banded_solve_kernelized(
-            lu_band, b, bw=bw, block=block, rhs_tile=rhs_tile, interpret=interpret
-        )
-    if impl == "xla":
-        return _core_banded.banded_solve_blocked(lu_band, b, bw=bw, block=block)
-    if impl == "xla_scalar":
-        return _core_banded.banded_solve(lu_band, b, bw=bw)
-    raise ValueError(f"unknown impl {impl!r}")
+    ``impl=None`` consults the measured cache first: the smoke bench seeds
+    it with the ``banded_solve_n16384_*`` shootout, so the auto path picks
+    whatever actually won on this host (``xla_scalar`` beats the blocked
+    kernel 2.4 ms vs 8.1 ms under interpret-mode DMA emulation on this CPU
+    container; on a real TPU the measurement flips back)."""
+    if lu_band.ndim >= 3:
+        if lu_band.ndim > 3:  # fold extra leading batch dims, like banded_lu()
+            lead, tail = lu_band.shape[:-2], lu_band.shape[-2:]
+            bf = b.reshape((-1,) + b.shape[len(lead):])
+            x = _banded_solve_batched(
+                lu_band.reshape((-1,) + tail), bf,
+                bw=bw, impl=impl, block=block, interpret=interpret,
+            )
+            return x.reshape(lead + x.shape[1:])
+        return _banded_solve_batched(lu_band, b, bw=bw, impl=impl, block=block, interpret=interpret)
+    return _with_batch_rule(
+        lambda l, r: _banded_solve_2d(
+            l, r, bw=bw, impl=impl, block=block, rhs_tile=rhs_tile, interpret=interpret
+        ),
+        lambda ls, rs: _banded_solve_batched(
+            ls, rs, bw=bw, impl=impl, block=block, interpret=interpret
+        ),
+    )(lu_band, b)
 
 
 def banded_linear_solve(
@@ -252,7 +378,7 @@ def banded_linear_solve(
     b: jax.Array,
     *,
     bw: int,
-    impl: str = "pallas",
+    impl: str | None = None,
     solve_impl: str | None = None,
     block: int | None = None,
     rhs_tile: int = 256,
@@ -262,7 +388,7 @@ def banded_linear_solve(
     contract :func:`linear_solve` honours): ``"xla*"`` factor impls solve
     through the matching jnp path, Pallas factor impls solve through the
     blocked solve kernel.  ``solve_impl`` overrides the solve phase."""
-    if solve_impl is None:
+    if solve_impl is None and impl is not None:
         solve_impl = impl if impl in ("xla", "xla_scalar") else "pallas"
     lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret)
     return banded_solve(

@@ -1,0 +1,38 @@
+"""`repro.solvers` — the unified solver dispatch registry.
+
+One subsystem decides *which* implementation runs every factor/solve in the
+repo:
+
+* :class:`Problem` (``problem.py``) — shape-level descriptor of a call;
+* :class:`Backend` (``registry.py``) — callable + capability predicate +
+  static priority, registered per ``(op, structure)`` slot;
+* ``cache.py`` — the measured autotune cache (persisted JSON, populated by
+  ``scripts/autotune.py`` and seeded by the smoke bench) that makes
+  selection measurement-driven;
+* ``backends.py`` — registrations for every kernel generation (imported
+  here for its side effects).
+
+Public ops in :mod:`repro.kernels.ops` are a thin compatibility shim over
+:func:`select`/:func:`dispatch`; see ``README.md`` in this directory.
+"""
+from .problem import Problem, OPS, STRUCTURES
+from .registry import Backend, backends_for, candidates, dispatch, get_backend, register, select
+from .cache import AutotuneCache, get_cache, cache_path, invalidate
+from . import backends as _backends  # noqa: F401  (side effect: registration)
+
+__all__ = [
+    "Problem",
+    "Backend",
+    "OPS",
+    "STRUCTURES",
+    "register",
+    "backends_for",
+    "candidates",
+    "get_backend",
+    "select",
+    "dispatch",
+    "AutotuneCache",
+    "get_cache",
+    "cache_path",
+    "invalidate",
+]

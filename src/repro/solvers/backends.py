@@ -1,0 +1,349 @@
+"""Backend registrations: every solver generation in one table.
+
+Importing this module (done by ``repro.solvers``) populates the registry
+with all existing implementations — the fused megakernel, the legacy
+multi-launch blocked driver, VMEM/tiled substitution, the banded
+blocked/tiled/scalar family, the batched VMEM grid kernels, the
+multi-device shard_map LU, and the pure-jnp mirrors.  The static
+``priority`` functions reproduce the pre-registry hardcoded dispatch
+(fused-for-fp32, the 2048-order solve VMEM threshold, the 6 MB banded byte
+cap) so a cache-less process is behaviour-identical to the historical
+``kernels/ops.py`` tables.
+
+Adding a backend is one :func:`repro.solvers.registry.register` call — see
+``src/repro/solvers/README.md`` for the recipe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import banded as _core_banded
+from repro.core import blocked as _core_blocked
+from repro.core import solve as _core_solve
+from repro.kernels import banded as _kbanded
+from repro.kernels import batched_lu as _kbatched
+from repro.kernels import ebv_lu as _k
+from repro.kernels import trsm as _trsm
+
+from .problem import Problem
+from .registry import Backend, register
+
+__all__ = ["SOLVE_VMEM_MAX_N", "BANDED_VMEM_MAX_BYTES", "BATCHED_VMEM_MAX_N", "banded_static_impl"]
+
+# Above this order the packed (n, n) LU no longer comfortably shares VMEM
+# with an RHS tile, so the static solve choice switches to the tiled driver.
+SOLVE_VMEM_MAX_N = 2048
+
+# Above this many skewed-band bytes the static banded choice switches from
+# the VMEM-resident blocked kernel to the HBM-streaming tiled kernel (the
+# VMEM kernel holds the skewed band twice — in and out — on real TPUs).
+BANDED_VMEM_MAX_BYTES = 6 * 2**20
+
+# Largest per-system order the batched grid kernels keep VMEM-resident
+# ((n, n) matrix + (n, m) RHS per grid program).
+BATCHED_VMEM_MAX_N = 1024
+
+
+def _itemsize(p: Problem) -> int:
+    return jnp.dtype(p.dtype).itemsize
+
+
+def _is_f32(p: Problem) -> bool:
+    return p.dtype == "float32"
+
+
+def _local(p: Problem) -> bool:
+    return p.devices == 1
+
+
+def _banded_skew_bytes(p: Problem, block: int | None = None) -> int:
+    c = _core_banded.band_block_size(p.n, p.bw, block)
+    return _core_banded.skew_rows(p.n, p.bw, c) * (c + 2 * p.bw) * _itemsize(p)
+
+
+def banded_static_impl(n: int, bw: int, block: int | None, itemsize: int) -> str:
+    """The historical banded auto rule (kept callable for the shim/tests)."""
+    c = _core_banded.band_block_size(n, bw, block)
+    skew_bytes = _core_banded.skew_rows(n, bw, c) * (c + 2 * bw) * itemsize
+    return "pallas_blocked" if skew_bytes <= BANDED_VMEM_MAX_BYTES else "pallas_tiled"
+
+
+# ---------------------------------------------------------------------------
+# jitted wrappers for the pure-jnp mirrors (the Pallas entry points are
+# already jitted at their definitions; the mirrors were relying on the old
+# monolithic jit around ops.* and would otherwise run eagerly)
+# ---------------------------------------------------------------------------
+_fused_blocked_lu_j = jax.jit(_core_blocked.fused_blocked_lu, static_argnames=("block",))
+_lu_solve_j = jax.jit(_core_solve.lu_solve)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "col_tile", "interpret"))
+def _pallas_blocked_lu(a, *, block: int, col_tile: int, interpret: bool | None):
+    """Legacy multi-launch blocked driver: one panel kernel + one fused
+    bi-vector step kernel per block column (kept as the forced-impl
+    baseline; see kernels/README.md for the launch/traffic math)."""
+    n = a.shape[-1]
+    block = min(block, n)
+    for k0 in range(0, n, block):
+        b = min(block, n - k0)
+        pan = _k.panel(a[k0:, k0 : k0 + b], interpret=interpret)
+        a = a.at[k0:, k0 : k0 + b].set(pan)
+        w = n - k0 - b
+        if w > 0:
+            ct = min(col_tile, w)
+            if w % ct:
+                # Pad the trailing width to the next tile multiple (tiles
+                # capped at 128 lanes) instead of halving the tile — odd
+                # widths used to degrade to 1-column tiles.  Zero columns are
+                # inert through trsm and the rank-b update.
+                ct = min(col_tile, 128)
+                wp = -(-w // ct) * ct
+                top = jnp.pad(a[k0 : k0 + b, k0 + b :], ((0, 0), (0, wp - w)))
+                trail = jnp.pad(a[k0 + b :, k0 + b :], ((0, 0), (0, wp - w)))
+                u12, new_trail = _k.fused_step(pan, top, trail, col_tile=ct, interpret=interpret)
+                u12, new_trail = u12[:, :w], new_trail[:, :w]
+            else:
+                u12, new_trail = _k.fused_step(
+                    pan, a[k0 : k0 + b, k0 + b :], a[k0 + b :, k0 + b :],
+                    col_tile=ct, interpret=interpret,
+                )
+            a = a.at[k0 : k0 + b, k0 + b :].set(u12)
+            a = a.at[k0 + b :, k0 + b :].set(new_trail)
+    return a
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def _batched_xla_lu(a, *, block: int = 256):
+    return jax.vmap(lambda m: _core_blocked.fused_blocked_lu(m, block=block))(a)
+
+
+_batched_xla_solve_j = jax.jit(jax.vmap(_core_solve.lu_solve))
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "block"))
+def _batched_xla_banded_lu(arow, *, bw: int, block: int | None = None):
+    return jax.vmap(lambda m: _core_banded.banded_lu_blocked(m, bw=bw, block=block))(arow)
+
+
+@functools.partial(jax.jit, static_argnames=("bw", "block"))
+def _batched_xla_banded_solve(lu_band, b, *, bw: int, block: int | None = None):
+    return jax.vmap(lambda l, r: _core_banded.banded_solve_blocked(l, r, bw=bw, block=block))(lu_band, b)
+
+
+def _distributed_lu(problem, a, *, mesh, axis="model", block=64, placement="ebv_folded", **_):
+    from repro.core.distributed import distributed_blocked_lu
+
+    return distributed_blocked_lu(a, mesh, axis=axis, block=block, placement=placement)
+
+
+def _distributed_linear_solve(problem, a, b, *, mesh, axis="model", block=64, placement="ebv_folded", **_):
+    from repro.core.distributed import distributed_lu_solve
+
+    return distributed_lu_solve(a, b, mesh, axis=axis, block=block, placement=placement)
+
+
+# ---------------------------------------------------------------------------
+# dense factor
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas_fused", op="factor", structure="dense",
+    call=lambda p, a, *, block=256, interpret=None, **_: _k.lu_fused(a, block=block, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 3.0,
+    vmem_bytes=lambda p: 3 * p.n * 256 * _itemsize(p),  # three (N, B) scratch slabs
+))
+register(Backend(
+    name="xla", op="factor", structure="dense",
+    call=lambda p, a, *, block=256, interpret=None, **_: _fused_blocked_lu_j(a, block=block),
+    supports=_local,
+    priority=lambda p: 2.0,  # static winner for non-fp32 (fused is fp32-only)
+))
+register(Backend(
+    name="pallas_vmem", op="factor", structure="dense",
+    call=lambda p, a, *, interpret=None, **_: _k.lu_vmem(a, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p) and p.n <= 4096,
+    priority=lambda p: 1.0,
+    autotune=False,  # not value-identical to the fused/xla twins
+    vmem_bytes=lambda p: 2 * p.n * p.n * _itemsize(p),
+))
+register(Backend(
+    name="pallas_blocked", op="factor", structure="dense",
+    call=lambda p, a, *, block=256, col_tile=256, interpret=None, **_:
+        _pallas_blocked_lu(a, block=block, col_tile=col_tile, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 0.0,
+    autotune=False,  # dominated multi-launch legacy driver (forced-impl only)
+))
+register(Backend(
+    name="distributed", op="factor", structure="dense",
+    call=_distributed_lu,
+    supports=lambda p: p.devices > 1,
+    priority=lambda p: 10.0,
+    autotune=False,  # needs a mesh; not shootable by the single-host harness
+))
+
+# ---------------------------------------------------------------------------
+# dense solve
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas_vmem", op="solve", structure="dense",
+    call=lambda p, lu, b, *, rhs_tile=256, interpret=None, **_:
+        _trsm.solve_vmem(lu, b, rhs_tile=rhs_tile, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 3.0 if p.n <= SOLVE_VMEM_MAX_N else 0.0,
+    vmem_bytes=lambda p: (p.n * p.n + p.n * max(p.rhs, 1)) * _itemsize(p),
+))
+register(Backend(
+    name="pallas_tiled", op="solve", structure="dense",
+    call=lambda p, lu, b, *, block=256, rhs_tile=256, interpret=None, **_:
+        _trsm.solve_tiled(lu, b, block=block, rhs_tile=rhs_tile, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="xla", op="solve", structure="dense",
+    call=lambda p, lu, b, **_: _lu_solve_j(lu, b),
+    supports=_local,
+    priority=lambda p: 0.5,
+))
+
+# ---------------------------------------------------------------------------
+# banded factor
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas_blocked", op="factor", structure="banded",
+    call=lambda p, arow, *, bw, block=None, interpret=None, **_:
+        _kbanded.banded_lu_blocked(arow, bw=bw, block=block, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 3.0 if _banded_skew_bytes(p) <= BANDED_VMEM_MAX_BYTES else 0.0,
+    vmem_bytes=lambda p: 2 * _banded_skew_bytes(p),
+))
+register(Backend(
+    name="pallas_tiled", op="factor", structure="banded",
+    call=lambda p, arow, *, bw, block=None, interpret=None, **_:
+        _kbanded.banded_lu_tiled(arow, bw=bw, block=block, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="xla", op="factor", structure="banded",
+    call=lambda p, arow, *, bw, block=None, **_: _core_banded.banded_lu_blocked(arow, bw=bw, block=block),
+    supports=_local,
+    priority=lambda p: 0.5,
+))
+register(Backend(
+    name="pallas_scalar", op="factor", structure="banded",
+    call=lambda p, arow, *, bw, interpret=None, **_:
+        _kbanded.banded_lu_kernelized(arow, bw=bw, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 0.2,
+    autotune=False,  # legacy scalar-sequential kernel (forced-impl only)
+))
+register(Backend(
+    name="xla_scalar", op="factor", structure="banded",
+    call=lambda p, arow, *, bw, **_: _core_banded.banded_lu(arow, bw=bw),
+    supports=_local,
+    priority=lambda p: 0.1,
+    autotune=False,  # not value-identical to the blocked twins
+))
+
+# ---------------------------------------------------------------------------
+# banded solve
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas", op="solve", structure="banded",
+    call=lambda p, lub, b, *, bw, block=None, rhs_tile=256, interpret=None, **_:
+        _kbanded.banded_solve_kernelized(lub, b, bw=bw, block=block, rhs_tile=rhs_tile, interpret=interpret),
+    supports=_local,
+    priority=lambda p: 2.0,
+))
+register(Backend(
+    name="xla", op="solve", structure="banded",
+    call=lambda p, lub, b, *, bw, block=None, **_:
+        _core_banded.banded_solve_blocked(lub, b, bw=bw, block=block),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="xla_scalar", op="solve", structure="banded",
+    call=lambda p, lub, b, *, bw, **_: _core_banded.banded_solve(lub, b, bw=bw),
+    supports=_local,
+    priority=lambda p: 0.5,  # statically dominated; wins via measurement on
+                             # this container (BENCH_kernels.json, banded_solve_*)
+))
+
+# ---------------------------------------------------------------------------
+# batched dense (optimizer path: many small independent systems)
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas_vmem", op="factor", structure="batched_dense",
+    call=lambda p, a, *, interpret=None, **_: _kbatched.batched_lu_vmem(a, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p) and p.n <= BATCHED_VMEM_MAX_N,
+    priority=lambda p: 2.0,
+    vmem_bytes=lambda p: 2 * p.n * p.n * _itemsize(p),  # per grid program
+))
+register(Backend(
+    name="xla", op="factor", structure="batched_dense",
+    call=lambda p, a, *, block=256, **_: _batched_xla_lu(a, block=block),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="pallas_vmem", op="solve", structure="batched_dense",
+    call=lambda p, lu, b, *, interpret=None, **_: _kbatched.batched_lu_solve_vmem(lu, b, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p) and p.n <= BATCHED_VMEM_MAX_N,
+    priority=lambda p: 2.0,
+))
+register(Backend(
+    name="xla", op="solve", structure="batched_dense",
+    call=lambda p, lu, b, **_: _batched_xla_solve_j(lu, b),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+
+# ---------------------------------------------------------------------------
+# batched banded (optimizer / CFD ensemble path)
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="pallas_vmem", op="factor", structure="batched_banded",
+    call=lambda p, arow, *, bw, block=None, interpret=None, **_:
+        _kbanded.batched_banded_lu_vmem(arow, bw=bw, block=block, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p) and _banded_skew_bytes(p) <= BANDED_VMEM_MAX_BYTES,
+    priority=lambda p: 2.0,
+    vmem_bytes=lambda p: 2 * _banded_skew_bytes(p),
+))
+register(Backend(
+    name="xla", op="factor", structure="batched_banded",
+    call=lambda p, arow, *, bw, block=None, **_: _batched_xla_banded_lu(arow, bw=bw, block=block),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="pallas_vmem", op="solve", structure="batched_banded",
+    call=lambda p, lub, b, *, bw, block=None, interpret=None, **_:
+        _kbanded.batched_banded_solve_vmem(lub, b, bw=bw, block=block, interpret=interpret),
+    supports=lambda p: _is_f32(p) and _local(p) and _banded_skew_bytes(p) <= BANDED_VMEM_MAX_BYTES,
+    priority=lambda p: 2.0,
+))
+register(Backend(
+    name="xla", op="solve", structure="batched_banded",
+    call=lambda p, lub, b, *, bw, block=None, **_: _batched_xla_banded_solve(lub, b, bw=bw, block=block),
+    supports=_local,
+    priority=lambda p: 1.0,
+))
+
+# ---------------------------------------------------------------------------
+# fused linear_solve (factor + substitution in one backend) — multi-device
+# only; single-device linear_solve composes a factor and a solve selection
+# in repro.kernels.ops.
+# ---------------------------------------------------------------------------
+register(Backend(
+    name="distributed", op="linear_solve", structure="dense",
+    call=_distributed_linear_solve,
+    supports=lambda p: p.devices > 1,
+    priority=lambda p: 10.0,
+    autotune=False,
+))

@@ -1,0 +1,94 @@
+"""The :class:`Problem` descriptor — one hashable record per solver call.
+
+Every dispatch decision in the repo flows through a ``Problem``: the public
+ops in :mod:`repro.kernels.ops` build one from their array arguments, the
+registry filters backends by capability against it, and the autotune cache
+keys its measurements on it.  The descriptor is deliberately *shape-level*
+(no array values): selection happens at trace time and must be a pure
+function of shapes, dtype and device count.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Problem", "OPS", "STRUCTURES"]
+
+OPS = ("factor", "solve", "linear_solve")
+STRUCTURES = ("dense", "banded", "batched_dense", "batched_banded")
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Shape-level description of one solver invocation.
+
+    ``n``        system order (for banded structures: number of band rows).
+    ``bw``       band half-width; 0 for dense structures.
+    ``batch``    leading batch size; 1 for unbatched structures.
+    ``rhs``      RHS width for solve ops (1 for a vector RHS); 0 for factor.
+    ``devices``  mesh extent the call spans; 1 means single-device.
+    """
+
+    op: str
+    structure: str
+    n: int
+    dtype: str = "float32"
+    bw: int = 0
+    batch: int = 1
+    rhs: int = 0
+    devices: int = 1
+
+    def __post_init__(self):
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r} (expected one of {OPS})")
+        if self.structure not in STRUCTURES:
+            raise ValueError(
+                f"unknown structure {self.structure!r} (expected one of {STRUCTURES})"
+            )
+
+    @property
+    def banded(self) -> bool:
+        return self.structure.endswith("banded")
+
+    @property
+    def batched(self) -> bool:
+        return self.structure.startswith("batched_")
+
+    @classmethod
+    def from_arrays(cls, op: str, a, b=None, *, bw: int = 0, devices: int = 1) -> "Problem":
+        """Build a descriptor from the operand arrays.
+
+        ``a`` is the matrix operand: ``(n, n)`` dense, ``(n, 2bw+1)``
+        row-aligned band (``bw > 0``), or either with one leading batch
+        axis.  ``b`` (optional) is the RHS whose trailing width becomes
+        ``rhs`` (1 for a vector).
+        """
+        banded = bw > 0
+        base = "banded" if banded else "dense"
+        matrix_ndim = 2
+        if a.ndim == matrix_ndim:
+            structure, batch = base, 1
+        elif a.ndim == matrix_ndim + 1:
+            structure, batch = f"batched_{base}", int(a.shape[0])
+        else:
+            raise ValueError(
+                f"{base} {op} expects a {matrix_ndim}-D matrix or one leading "
+                f"batch axis; got shape {tuple(a.shape)}"
+            )
+        n = int(a.shape[-2]) if banded else int(a.shape[-1])
+        rhs = 0
+        if b is not None:
+            # RHS ranks: (n,) / (n, m) unbatched, (B, n) / (B, n, m) batched
+            rhs_ndim_vec = 1 + (1 if structure.startswith("batched_") else 0)
+            rhs = 1 if b.ndim == rhs_ndim_vec else int(b.shape[-1])
+        return cls(
+            op=op,
+            structure=structure,
+            n=n,
+            dtype=jnp.dtype(a.dtype).name,
+            bw=int(bw),
+            batch=batch,
+            rhs=rhs,
+            devices=int(devices),
+        )

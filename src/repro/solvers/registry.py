@@ -1,0 +1,145 @@
+"""Backend registry + selection engine.
+
+One table for the whole solver stack: every kernel generation (fused
+megakernel, blocked drivers, banded blocked/tiled/scalar, batched VMEM grid
+kernels, multi-device shard_map LU, pure-jnp mirrors) registers a
+:class:`Backend` under its ``(op, structure)`` slot.  Selection is a
+three-stage funnel:
+
+1. **capability filter** — ``Backend.supports(problem)`` prunes backends
+   that cannot run the problem at all (dtype, VMEM footprint, device count);
+2. **measured selection** — the autotune cache
+   (:mod:`repro.solvers.cache`) picks the fastest *measured* capable
+   backend among those flagged ``autotune=True``;
+3. **static fallback** — with no transferable measurement, the highest
+   ``priority(problem)`` wins.  The registered priorities reproduce the
+   pre-registry hardcoded heuristics exactly (``pallas_fused`` for fp32
+   dense, the 2048-order VMEM solve threshold, the 6 MB banded byte cap),
+   so a cache-less process behaves like the historical ``ops.py`` tables.
+
+``impl=`` on the public ops is a *forced override*: it bypasses stages 2-3
+(and the capability filter — forcing an unsupported backend is an explicit
+request and fails with that backend's own error).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import cache as _cache
+from .problem import Problem
+
+__all__ = [
+    "Backend",
+    "register",
+    "backends_for",
+    "get_backend",
+    "candidates",
+    "select",
+    "dispatch",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One dispatchable implementation.
+
+    ``call``      ``(problem, *arrays, **kw) -> result``; adapters accept
+                  and ignore kwargs meant for other backends (``**_``) so
+                  the public ops can pass their full kwarg set through.
+    ``supports``  capability predicate; auto-selection only considers
+                  backends whose predicate holds.
+    ``priority``  static heuristic rank (higher wins) used when no
+                  measurement transfers.
+    ``autotune``  whether the backend competes in measured selection and is
+                  swept by ``scripts/autotune.py``.  Kept False for
+                  dominated legacy drivers and for backends whose output is
+                  not value-identical to the default of their slot (a cache
+                  flip must never change bitwise behaviour of twin-backed
+                  slots).
+    ``vmem_bytes`` optional footprint estimate (documentation + capability
+                  predicates build on it).
+    """
+
+    name: str
+    op: str
+    structure: str
+    call: Callable
+    supports: Callable[[Problem], bool] = lambda p: True
+    priority: Callable[[Problem], float] = lambda p: 0.0
+    autotune: bool = True
+    vmem_bytes: Callable[[Problem], int] | None = None
+
+
+_REGISTRY: dict[tuple[str, str], dict[str, Backend]] = {}
+
+
+def register(backend: Backend, *, overwrite: bool = False) -> Backend:
+    slot = _REGISTRY.setdefault((backend.op, backend.structure), {})
+    if backend.name in slot and not overwrite:
+        raise ValueError(
+            f"backend {backend.name!r} already registered for "
+            f"({backend.op}, {backend.structure})"
+        )
+    slot[backend.name] = backend
+    return backend
+
+
+def backends_for(op: str, structure: str) -> list[Backend]:
+    return list(_REGISTRY.get((op, structure), {}).values())
+
+
+def get_backend(op: str, structure: str, name: str) -> Backend:
+    slot = _REGISTRY.get((op, structure), {})
+    if name not in slot:
+        raise ValueError(
+            f"unknown impl {name!r} for ({op}, {structure}); "
+            f"registered: {sorted(slot)}"
+        )
+    return slot[name]
+
+
+def candidates(problem: Problem, *, allow: Callable[[Backend], bool] | None = None) -> list[Backend]:
+    """Capability-filtered backends for ``problem`` (optionally restricted
+    by ``allow``, e.g. the legacy ``impl="pallas"`` pallas-only auto)."""
+    out = [b for b in backends_for(problem.op, problem.structure) if b.supports(problem)]
+    if allow is not None:
+        out = [b for b in out if allow(b)]
+    return out
+
+
+def select(
+    problem: Problem,
+    *,
+    impl: str | None = None,
+    cache: _cache.AutotuneCache | None = None,
+    allow: Callable[[Backend], bool] | None = None,
+) -> Backend:
+    """Pick the backend for ``problem``: forced ``impl`` > measured winner >
+    static priority."""
+    if impl is not None:
+        return get_backend(problem.op, problem.structure, impl)
+    cands = candidates(problem, allow=allow)
+    if not cands:
+        raise ValueError(
+            f"no capable backend for {problem} among "
+            f"{[b.name for b in backends_for(problem.op, problem.structure)]}"
+        )
+    cache = _cache.get_cache() if cache is None else cache
+    measured = cache.best(problem, [b.name for b in cands if b.autotune])
+    if measured is not None:
+        return get_backend(problem.op, problem.structure, measured)
+    return max(cands, key=lambda b: b.priority(problem))
+
+
+def dispatch(
+    problem: Problem,
+    *arrays,
+    impl: str | None = None,
+    cache: _cache.AutotuneCache | None = None,
+    allow: Callable[[Backend], bool] | None = None,
+    **kw,
+):
+    """Select and run in one step (the public ops' workhorse)."""
+    backend = select(problem, impl=impl, cache=cache, allow=allow)
+    return backend.call(problem, *arrays, **kw)

@@ -127,6 +127,7 @@ def ebv_preconditioned(
     max_precond_dim: int = 1024,
     solver_block: int = 128,
     graft_scale: float = 0.3,
+    solver_impl: str | None = None,
 ) -> Optimizer:
     """Second-order preconditioning via EbV LU solves.
 
@@ -140,9 +141,16 @@ def ebv_preconditioned(
     step's magnitude — Shampoo-style grafting, which inherits Adam's
     step-size decay near convergence instead of re-normalizing the whitened
     direction to a constant-size step (that oscillates on stiff problems).
-    """
-    from repro.core.blocked import blocked_lu
-    from repro.core.solve import lu_solve
+
+    The per-parameter ``(C/τ + λI) P = G`` systems are *grouped by order and
+    solved as one batched call per group* through the ``repro.solvers``
+    registry (``ops.linear_solve`` on stacked ``(B, n, n)`` operands) — on
+    the registry's static/measured choice that is the batched Pallas grid
+    kernel (:mod:`repro.kernels.batched_lu`), one grid program per
+    parameter-factor system, instead of the per-leaf pure-jnp reference
+    this optimizer used to unroll.  ``solver_impl`` forces a backend (e.g.
+    ``"xla"`` for the vmapped mirror)."""
+    from repro.kernels import ops as kops
 
     adam = adamw(
         schedule, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
@@ -174,11 +182,24 @@ def ebv_preconditioned(
         bc1 = 1 - b1 ** step.astype(jnp.float32)
         bc2 = 1 - b2 ** step.astype(jnp.float32)
 
-        def upd(p, g, mu, nu, cov):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_p = treedef.flatten_up_to(params)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_c = treedef.flatten_up_to(state["cov"])
+
+        # ---- pass 1: Adam stats + covariance EMAs; collect the eligible
+        # (C/τ + λI) P = G systems, grouped by order n --------------------
+        stats = []
+        groups: dict[int, list[tuple[int, jax.Array, jax.Array]]] = {}
+        for i, (p, g, mu, nu, cov) in enumerate(
+            zip(flat_p, flat_g, flat_mu, flat_nu, flat_c)
+        ):
             gc32 = g.astype(jnp.float32) * clip_scale
             mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * gc32
             nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * gc32 * gc32
             adam_dir = (mu32 / bc1) / (jnp.sqrt(nu32 / bc2) + eps)
+            left = None
             if eligible(p):
                 # covariance on the RAW gradient: clipping rescales every
                 # step by a different factor, and an EMA over
@@ -191,11 +212,29 @@ def ebv_preconditioned(
                 n = cov.shape[0]
                 tr = jnp.trace(cov) / n
                 a = cov / jnp.maximum(tr, 1e-12) + damping * jnp.eye(n, dtype=jnp.float32)
-                # the paper's solver: blocked EbV LU + two-phase
-                # substitution, applied to the bias-corrected momentum
-                lu = blocked_lu(a, block=min(solver_block, n))
                 rhs = mu32 / bc1
-                pre = lu_solve(lu, rhs) if left else lu_solve(lu, rhs.T).T
+                groups.setdefault(n, []).append((i, a, rhs if left else rhs.T))
+            stats.append((mu32, nu32, adam_dir, cov, left))
+
+        # ---- batched solves: one registry dispatch per order group (the
+        # batched Pallas grid kernels — one program per parameter-factor
+        # system); narrower RHSs inside a group zero-pad to the widest ----
+        solved: dict[int, jax.Array] = {}
+        for n, items in sorted(groups.items()):
+            mmax = max(r.shape[1] for _, _, r in items)
+            a3 = jnp.stack([a for _, a, _ in items])
+            r3 = jnp.stack(
+                [jnp.pad(r, ((0, 0), (0, mmax - r.shape[1]))) for _, _, r in items]
+            )
+            x3 = kops.linear_solve(a3, r3, impl=solver_impl, block=min(solver_block, n))
+            for j, (i, _, r) in enumerate(items):
+                solved[i] = x3[j, :, : r.shape[1]]
+
+        # ---- pass 2: grafting, weight decay, parameter update -----------
+        def finish(i, p, mu, nu):
+            mu32, nu32, adam_dir, cov, left = stats[i]
+            if i in solved:
+                pre = solved[i] if left else solved[i].T
                 # graft onto (a fraction of) the Adam step's magnitude so
                 # the step size decays with Adam's near convergence
                 target = graft_scale * jnp.linalg.norm(adam_dir)
@@ -207,14 +246,9 @@ def ebv_preconditioned(
             newp = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
             return newp, mu32.astype(mu.dtype), nu32.astype(nu.dtype), cov
 
-        flat_g, treedef = jax.tree.flatten(grads)
-        flat_p = treedef.flatten_up_to(params)
-        flat_mu = treedef.flatten_up_to(state["mu"])
-        flat_nu = treedef.flatten_up_to(state["nu"])
-        flat_c = treedef.flatten_up_to(state["cov"])
         out = [
-            upd(p, g, mu, nu, c)
-            for p, g, mu, nu, c in zip(flat_p, flat_g, flat_mu, flat_nu, flat_c)
+            finish(i, p, mu, nu)
+            for i, (p, mu, nu) in enumerate(zip(flat_p, flat_mu, flat_nu))
         ]
         return treedef.unflatten([o[0] for o in out]), {
             "step": step,

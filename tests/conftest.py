@@ -12,6 +12,15 @@ if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# Deterministic solver autotune cache: tests dispatch against the repo-local
+# cache written by scripts/check.sh's autotune stage (absent = pure static
+# heuristics), never against whatever ~/.cache/repro_solvers.json a developer
+# machine has accumulated.
+os.environ.setdefault(
+    "REPRO_SOLVERS_CACHE",
+    os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".autotune_cache.json")),
+)
+
 import jax
 import numpy as np
 import pytest

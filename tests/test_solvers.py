@@ -1,0 +1,296 @@
+"""`repro.solvers` registry: measurement-driven selection (ISSUE 4
+acceptance), capability filtering, static-fallback parity with the
+historical dispatch, batched/vmap routing, and the multi-device backend."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_diagonally_dominant, to_banded
+from repro.core.banded import make_banded_dd
+from repro.kernels import ops
+from repro.solvers import (
+    AutotuneCache,
+    Problem,
+    backends_for,
+    candidates,
+    get_backend,
+    select,
+)
+from repro.solvers import cache as scache
+from repro.utils.hlo import primitive_count
+
+
+@pytest.fixture
+def no_cache(monkeypatch, tmp_path):
+    """Pin an absent cache file so selection is purely static."""
+    monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(tmp_path / "absent.json"))
+    scache.invalidate()
+    yield
+    scache.invalidate()
+
+
+def _env_cache(monkeypatch, tmp_path, entries):
+    path = tmp_path / "cache.json"
+    path.write_text(json.dumps({"version": 1, "entries": entries}))
+    monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(path))
+    scache.invalidate()
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Problem descriptor
+# ---------------------------------------------------------------------------
+def test_problem_from_arrays():
+    a = jnp.zeros((64, 64))
+    p = Problem.from_arrays("factor", a)
+    assert (p.structure, p.n, p.batch, p.bw) == ("dense", 64, 1, 0)
+    p = Problem.from_arrays("solve", jnp.zeros((5, 64, 64)), jnp.zeros((5, 64, 3)))
+    assert (p.structure, p.batch, p.rhs) == ("batched_dense", 5, 3)
+    p = Problem.from_arrays("solve", jnp.zeros((5, 64, 64)), jnp.zeros((5, 64)))
+    assert p.rhs == 1
+    p = Problem.from_arrays("factor", jnp.zeros((64, 9)), bw=4)
+    assert (p.structure, p.n, p.bw) == ("banded", 64, 4)
+    p = Problem.from_arrays("factor", jnp.zeros((3, 64, 9), jnp.bfloat16), bw=4)
+    assert (p.structure, p.batch, p.dtype) == ("batched_banded", 3, "bfloat16")
+    with pytest.raises(ValueError, match="unknown op"):
+        Problem(op="nope", structure="dense", n=8)
+    with pytest.raises(ValueError, match="leading batch axis"):
+        Problem.from_arrays("factor", jnp.zeros((2, 2, 8, 8)))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: selection is measurement-driven (synthetic cache A vs inverted
+# vs no cache == today's static choices)
+# ---------------------------------------------------------------------------
+def test_registry_shootout_measured_and_inverted_and_static(no_cache):
+    p = Problem(op="factor", structure="dense", n=256)
+    prefer_a = AutotuneCache(entries=[{
+        "op": "factor", "structure": "dense", "dtype": "float32", "bw": 0,
+        "n": 256, "times_us": {"pallas_fused": 10.0, "xla": 99.0},
+    }])
+    assert select(p, cache=prefer_a).name == "pallas_fused"
+    prefer_b = AutotuneCache(entries=[{
+        "op": "factor", "structure": "dense", "dtype": "float32", "bw": 0,
+        "n": 256, "times_us": {"pallas_fused": 99.0, "xla": 10.0},
+    }])
+    assert select(p, cache=prefer_b).name == "xla"
+    # no cache → the historical static default
+    assert select(p, cache=AutotuneCache()).name == "pallas_fused"
+    assert select(p).name == "pallas_fused"  # env pinned to an absent file
+
+
+def test_static_choices_reproduce_historical_dispatch(no_cache):
+    # dense solve: VMEM driver to 2048, tiled beyond (the old threshold)
+    assert select(Problem(op="solve", structure="dense", n=512, rhs=4)).name == "pallas_vmem"
+    assert select(Problem(op="solve", structure="dense", n=4096, rhs=4)).name == "pallas_tiled"
+    # banded factor: the old 6 MB skewed-band VMEM byte rule
+    assert select(Problem(op="factor", structure="banded", n=512, bw=4)).name == "pallas_blocked"
+    assert select(Problem(op="factor", structure="banded", n=200_000, bw=16)).name == "pallas_tiled"
+    assert ops._banded_auto_impl(512, 4, None, 4) == "pallas_blocked"
+    assert ops._banded_auto_impl(200_000, 16, None, 4) == "pallas_tiled"
+    # banded solve: statically the blocked kernel (measurement may override)
+    assert select(Problem(op="solve", structure="banded", n=96, bw=4, rhs=1)).name == "pallas"
+    # batched dense: the VMEM grid kernel for small fp32 systems
+    assert select(Problem(op="factor", structure="batched_dense", n=128, batch=8)).name == "pallas_vmem"
+
+
+def test_capability_filter_and_forced_impl(no_cache):
+    # fp32-only backends drop out for bf16; static fallback is the mirror
+    p16 = Problem(op="factor", structure="dense", n=64, dtype="bfloat16")
+    names = [b.name for b in candidates(p16)]
+    assert "pallas_fused" not in names and "pallas_vmem" not in names
+    assert select(p16).name == "xla"
+    # devices>1 matches only the shard_map backend — and vice versa
+    pd = Problem(op="factor", structure="dense", n=256, devices=8)
+    assert [b.name for b in candidates(pd)] == ["distributed"]
+    assert all(b.name != "distributed" for b in candidates(Problem(op="factor", structure="dense", n=256)))
+    # forced-impl override bypasses auto; unknown names raise the old error
+    assert select(p16, impl="pallas_blocked").name == "pallas_blocked"
+    with pytest.raises(ValueError, match="unknown impl"):
+        get_backend("factor", "dense", "nope")
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.lu(jnp.zeros((8, 8)), impl="nope")
+
+
+def test_nearest_size_guard(no_cache):
+    # a 16384-order measurement must not steer a 96-order dispatch (> 4x
+    # away), but must steer an 8192-order one (2x away)
+    cache = AutotuneCache(entries=[{
+        "op": "solve", "structure": "banded", "dtype": "float32", "bw": 16,
+        "n": 16384, "times_us": {"pallas": 8139.0, "xla_scalar": 2385.0},
+    }])
+    near = Problem(op="solve", structure="banded", n=8192, bw=16, rhs=1)
+    far = Problem(op="solve", structure="banded", n=96, bw=4, rhs=1)
+    assert select(near, cache=cache).name == "xla_scalar"
+    assert select(far, cache=cache).name == "pallas"
+    assert cache.best(far, ["pallas", "xla_scalar"]) is None
+
+
+def test_cache_roundtrip_and_record_merge(tmp_path):
+    path = tmp_path / "c.json"
+    cache = AutotuneCache(path=str(path))
+    p = Problem(op="factor", structure="dense", n=333)
+    cache.record(p, {"pallas_fused": 7.0})
+    cache.record(p, {"xla": 5.0})  # merges into the same entry
+    cache.save()
+    loaded = AutotuneCache.load(str(path))
+    assert len(loaded.entries) == 1
+    assert loaded.best(p, ["pallas_fused", "xla"]) == "xla"
+    # candidates not in the entry are ignored; empty intersection -> None
+    assert loaded.best(p, ["pallas_fused"]) == "pallas_fused"
+    assert loaded.best(p, ["something_else"]) is None
+    # corrupt file degrades to an empty cache, not an exception
+    path.write_text("{not json")
+    assert AutotuneCache.load(str(path)).entries == []
+
+
+def test_env_cache_steers_public_ops(monkeypatch, tmp_path):
+    """End-to-end: the persisted cache flips ops.banded_solve's auto path."""
+    n, bw = 96, 4
+    ad = make_diagonally_dominant(jax.random.PRNGKey(0), n, sparse_band=bw)
+    arow = to_banded(ad, bw)
+    lub = ops.banded_lu(arow, bw=bw, impl="pallas_blocked")
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    entry = {"op": "solve", "structure": "banded", "dtype": "float32",
+             "bw": bw, "n": n, "times_us": {"pallas": 99.0, "xla_scalar": 1.0}}
+    _env_cache(monkeypatch, tmp_path, [entry])
+    jx = jax.make_jaxpr(lambda l, r: ops.banded_solve(l, r, bw=bw))(lub, b)
+    assert primitive_count(jx, "pallas_call") == 0  # measured winner: jnp loop
+    entry["times_us"] = {"pallas": 1.0, "xla_scalar": 99.0}
+    _env_cache(monkeypatch, tmp_path, [entry])
+    jx = jax.make_jaxpr(lambda l, r: ops.banded_solve(l, r, bw=bw))(lub, b)
+    assert primitive_count(jx, "pallas_call") == 1  # measured winner: kernel
+    scache.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# batched + vmap routing through the public ops
+# ---------------------------------------------------------------------------
+def test_ops_lu_batched_and_vmap_route_to_grid_kernel(no_cache):
+    from repro.kernels.batched_lu import batched_lu_vmem
+
+    stack = jnp.stack([make_diagonally_dominant(jax.random.PRNGKey(i), 48) for i in range(4)])
+    want = np.asarray(batched_lu_vmem(stack))
+    np.testing.assert_array_equal(np.asarray(ops.lu(stack)), want)
+    np.testing.assert_array_equal(np.asarray(jax.vmap(lambda m: ops.lu(m))(stack)), want)
+    # ONE batched pallas_call, not 4 lifted unbatched kernels
+    jx = jax.make_jaxpr(lambda s: ops.lu(s))(stack)
+    assert primitive_count(jx, "pallas_call") == 1
+    jx = jax.make_jaxpr(jax.vmap(lambda m: ops.lu(m)))(stack)
+    assert primitive_count(jx, "pallas_call") == 1
+    # forced xla names map to the vmapped mirror (no pallas)
+    jx = jax.make_jaxpr(lambda s: ops.lu(s, impl="xla"))(stack)
+    assert primitive_count(jx, "pallas_call") == 0
+
+
+def test_ops_banded_batched_and_vmap(no_cache):
+    from repro.kernels.banded import batched_banded_lu_vmem
+
+    n, bw = 40, 3
+    bands = jnp.stack([make_banded_dd(jax.random.PRNGKey(i), n, bw) for i in range(3)])
+    want = np.asarray(batched_banded_lu_vmem(bands, bw=bw))
+    np.testing.assert_array_equal(np.asarray(ops.banded_lu(bands, bw=bw)), want)
+    np.testing.assert_array_equal(
+        np.asarray(jax.vmap(lambda m: ops.banded_lu(m, bw=bw))(bands)), want
+    )
+    jx = jax.make_jaxpr(jax.vmap(lambda m: ops.banded_lu(m, bw=bw)))(bands)
+    assert primitive_count(jx, "pallas_call") == 1
+    # batched banded solve: vector and matrix RHS
+    lub = ops.banded_lu(bands, bw=bw)
+    bv = jax.random.normal(jax.random.PRNGKey(9), (3, n))
+    xv = ops.banded_solve(lub, bv, bw=bw)
+    assert xv.shape == (3, n)
+    for i in range(3):
+        x1 = ops.banded_solve(lub[i], bv[i], bw=bw, impl="pallas")
+        np.testing.assert_allclose(np.asarray(xv[i]), np.asarray(x1), atol=1e-5)
+
+
+def test_batched_impl_aliases(no_cache):
+    """Forced impl names on batched inputs map to their batched analog —
+    including the legacy 'pallas' auto alias on the banded ops (regression:
+    the alias used to be pre-mapped to 'pallas_vmem' and then rejected by
+    the unbatched slot's name validation)."""
+    n, bw = 40, 3
+    bands = jnp.stack([make_banded_dd(jax.random.PRNGKey(i), n, bw) for i in range(3)])
+    want = np.asarray(ops.banded_lu(bands, bw=bw))
+    for impl in ("pallas", "pallas_blocked", "pallas_tiled"):
+        np.testing.assert_array_equal(np.asarray(ops.banded_lu(bands, bw=bw, impl=impl)), want)
+    lub = ops.banded_lu(bands, bw=bw)
+    bv = jax.random.normal(jax.random.PRNGKey(5), (3, n))
+    np.testing.assert_array_equal(
+        np.asarray(ops.banded_solve(lub, bv, bw=bw, impl="pallas")),
+        np.asarray(ops.banded_solve(lub, bv, bw=bw)),
+    )
+    stack = jnp.stack([make_diagonally_dominant(jax.random.PRNGKey(i), 32) for i in range(2)])
+    lus = ops.lu(stack)
+    bs = jax.random.normal(jax.random.PRNGKey(6), (2, 32, 3))
+    np.testing.assert_array_equal(
+        np.asarray(ops.lu_solve(lus, bs, impl="pallas")),
+        np.asarray(ops.lu_solve(lus, bs, impl="pallas_vmem")),
+    )
+    with pytest.raises(ValueError, match="unknown impl"):
+        ops.banded_lu(bands, bw=bw, impl="nope")
+
+
+def test_linear_solve_batched_end_to_end(no_cache):
+    stack = jnp.stack([make_diagonally_dominant(jax.random.PRNGKey(i + 7), 64) for i in range(5)])
+    b = jax.random.normal(jax.random.PRNGKey(3), (5, 64, 3))
+    x = ops.linear_solve(stack, b)
+    for i in range(5):
+        res = np.linalg.norm(np.asarray(stack[i] @ x[i] - b[i])) / np.linalg.norm(np.asarray(b[i]))
+        assert res < 1e-4
+    from repro.core.batched import batched_linear_solve
+
+    x_auto = batched_linear_solve(stack, b, method="auto")
+    np.testing.assert_allclose(np.asarray(x_auto), np.asarray(x), atol=1e-5)
+    # extra leading batch dims fold through BOTH phases (factor used to
+    # fold while the solve phase rejected the 4-D factor it produced)
+    x4 = ops.linear_solve(stack.reshape(5, 1, 64, 64), b.reshape(5, 1, 64, 3))
+    np.testing.assert_array_equal(np.asarray(x4).reshape(5, 64, 3), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# multi-device backend (8 host devices forced by conftest)
+# ---------------------------------------------------------------------------
+def test_distributed_backend_registered_and_dispatches(no_cache):
+    from repro.core.blocked import blocked_lu
+    from repro.launch.mesh import make_mesh
+
+    assert select(Problem(op="factor", structure="dense", n=256, devices=8)).name == "distributed"
+    assert get_backend("linear_solve", "dense", "distributed").supports(
+        Problem(op="linear_solve", structure="dense", n=256, rhs=1, devices=8)
+    )
+    mesh = make_mesh((8,), ("model",))
+    n = 256
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), n)
+    got = np.asarray(ops.lu(a, mesh=mesh, block=16))
+    want = np.asarray(blocked_lu(a, block=16))
+    np.testing.assert_allclose(got, want, atol=1e-3)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x = ops.linear_solve(a, b, mesh=mesh, block=16)
+    res = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+    assert res < 1e-5
+    # a forced single-device impl cannot silently ignore the mesh
+    with pytest.raises(ValueError, match="cannot honour mesh"):
+        ops.lu(a, mesh=mesh, impl="pallas_fused")
+    with pytest.raises(ValueError, match="cannot honour mesh"):
+        ops.linear_solve(a, b, mesh=mesh, impl="xla")
+
+
+def test_every_slot_has_backends_and_a_static_winner(no_cache):
+    """Registry completeness: every (op, structure) slot the shim can route
+    to has at least one capable backend at a representative shape."""
+    shapes = {
+        "dense": dict(n=64),
+        "banded": dict(n=64, bw=4),
+        "batched_dense": dict(n=64, batch=2),
+        "batched_banded": dict(n=64, bw=4, batch=2),
+    }
+    for op in ("factor", "solve"):
+        for structure, kw in shapes.items():
+            p = Problem(op=op, structure=structure, rhs=0 if op == "factor" else 1, **kw)
+            assert backends_for(op, structure), (op, structure)
+            assert select(p) is not None
