@@ -3,10 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV (brief contract).  ``--full`` runs
 the paper's full matrix sizes (up to 16000); default sizes keep the suite
 CPU-friendly.  ``--smoke`` runs a fast CI subset (table2 at n=256, the LU
-kernel-impl shootout at n∈{256, 1024}, and the banded kernel shootout at
-the paper's n=16384 / bw=16) and writes ``BENCH_kernels.json``
-(name → us_per_call) at the repo root, seeding the perf trajectory across
-PRs.
+kernel-impl shootout at n∈{256, 1024}, the banded kernel shootout at the
+paper's n=16384 / bw=16, the optimizer trajectory, and the serving rows —
+decode host-sync before/after, ragged continuous batching, solve-service
+cache speedup) and writes ``BENCH_kernels.json`` (name → us_per_call) at
+the repo root, seeding the perf trajectory across PRs.
 """
 from __future__ import annotations
 
@@ -128,6 +129,15 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     for impl, t in time_shootout(fns, a3, r3, iters=5).items():
         rows_us[f"opt_precond_b{nleaves}_n{d}_{impl}"] = t * 1e6
         emit(f"opt_precond_b{nleaves}_n{d}_{impl}", t)
+
+    # --- serving trajectory: decode host-sync fix (before/after), ragged
+    # continuous-batching throughput, and the solve service's factorization
+    # cache (serve_solve_cache_cached must beat _refactor >= 2x; gated in
+    # scripts/check.sh).
+    from . import serve_bench
+
+    for name, t in serve_bench.run().items():
+        rows_us[name] = t * 1e6
 
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_kernels.json")

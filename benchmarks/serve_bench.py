@@ -1,0 +1,98 @@
+"""Serving-path benchmarks: decode host-sync fix, continuous-batching
+throughput, and the solve service's factorization-cache speedup.
+
+Rows (all ``us_per_call``):
+
+* ``serve_gen_b4_hostsync`` / ``serve_gen_b4_buffered`` — the same
+  prefill+decode workload driven two ways: the legacy loop that called
+  ``np.asarray(tok)`` every decode step (blocking the host on every token)
+  vs the engine's device-side token buffer with one transfer per request.
+* ``serve_ragged_r8_s4`` — 8 ragged requests through the 4-slot
+  continuous-batching scheduler (derived column: requests/s, tok/s).
+* ``serve_solve_cache_refactor`` / ``serve_solve_cache_cached`` — one
+  solve request against a cold vs warm factorization cache; the ratio is
+  the factor-once/solve-many win and is gated (>= 2x) by scripts/check.sh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_call
+
+
+def _legacy_hostsync_generate(eng, prompts: np.ndarray, max_new: int) -> np.ndarray:
+    """The pre-scheduler decode loop: batched prefill, then lockstep decode
+    with a host sync on EVERY token — ``np.asarray(tok)`` inside the loop
+    blocks dispatch until the step lands.  Kept as the bench baseline the
+    engine's device-side token buffer is measured against."""
+    from repro.models import lm
+
+    b, s0 = prompts.shape
+    caches, logits = jax.jit(
+        lambda p, t: lm.prefill(p, {"tokens": t}, eng.cfg, cache_len=eng.max_len)
+    )(eng.params, jnp.asarray(prompts))
+    tok = jnp.argmax(logits[:, -1, : eng.cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+    out = [prompts]
+    pos = jnp.full((b,), s0, jnp.int32)
+    for _ in range(max_new - 1):
+        out.append(np.asarray(tok))  # <-- the per-token host sync
+        caches, logits = eng._decode(eng.params, caches, tok, pos)
+        tok = jnp.argmax(logits[:, -1, : eng.cfg.vocab_size], -1).astype(jnp.int32)[:, None]
+        pos = pos + 1
+    out.append(np.asarray(tok))
+    return np.concatenate(out, axis=1)
+
+
+def run(smoke: bool = True) -> dict[str, float]:
+    """Returns {row_name: seconds_per_call} and emits CSV rows."""
+    from repro.configs.base import get_config
+    from repro.core import make_diagonally_dominant
+    from repro.models import lm
+    from repro.serve.engine import Engine, GenRequest
+    from repro.serve.solve_service import SolveService
+
+    rows: dict[str, float] = {}
+
+    cfg = get_config("llama3_8b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch, s0, new = 4, 16, 24
+    eng = Engine(params, cfg, max_len=s0 + new + 8, slots=batch, bucket=4)
+    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (batch, s0)).astype(np.int32)
+
+    t = time_call(lambda: _legacy_hostsync_generate(eng, prompts, new), iters=3)
+    rows["serve_gen_b4_hostsync"] = t
+    emit("serve_gen_b4_hostsync", t, f"{batch * new / t:.0f}tok/s")
+    t = time_call(lambda: eng.generate(prompts, max_new_tokens=new), iters=3)
+    rows["serve_gen_b4_buffered"] = t
+    emit("serve_gen_b4_buffered", t, f"{batch * new / t:.0f}tok/s")
+
+    rng = np.random.default_rng(1)
+    lens = [3, 9, 5, 12, 2, 7, 4, 10]
+    news = [9, 2, 5, 3, 11, 4, 6, 2]
+    reqs = [
+        GenRequest(tokens=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+                   max_new_tokens=n, seed=i)
+        for i, (s, n) in enumerate(zip(lens, news))
+    ]
+    t = time_call(lambda: eng.serve(reqs), iters=3)
+    rows["serve_ragged_r8_s4"] = t
+    emit("serve_ragged_r8_s4", t, f"{len(reqs) / t:.1f}req/s;{sum(news) / t:.0f}tok/s")
+
+    n = 1024
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    SolveService().solve(a, b)  # warm: compiles factor+solve once
+    # iters higher than the generation rows: these calls are ~10-100x
+    # shorter, so the cross-PR perf gate needs a steadier median
+    t = time_call(lambda: SolveService().solve(a, b), iters=7)  # cold cache
+    rows["serve_solve_cache_refactor"] = t
+    emit("serve_solve_cache_refactor", t)
+    svc = SolveService()
+    svc.solve(a, b)  # prime the cache
+    t = time_call(lambda: svc.solve(a, b), iters=7)
+    rows["serve_solve_cache_cached"] = t
+    emit("serve_solve_cache_cached", t,
+         f"{rows['serve_solve_cache_refactor'] / t:.1f}x_vs_refactor")
+    return rows

@@ -1,6 +1,8 @@
-"""Batched serving example: prefill + KV-cache decode with the Engine.
+"""Continuous-batching serving example: ragged requests through the
+slot-based engine, plus the factor-once/solve-many solve service.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch mixtral_8x22b
+    PYTHONPATH=src python examples/serve_lm.py --arch mixtral_8x22b \
+        --temperature 0.7 --seed 11
 """
 import argparse
 import sys
@@ -12,34 +14,72 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_config
+from repro.core import make_diagonally_dominant
 from repro.models import lm
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, GenRequest
+from repro.serve.solve_service import SolveService
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3_8b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8, help="request count")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--bucket", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(params, cfg, max_len=args.prompt_len + args.new_tokens + cfg.num_prefix_embeds + 8)
+    eng = Engine(
+        params, cfg, slots=args.slots, bucket=args.bucket,
+        max_len=args.prompt_len + args.bucket + args.new_tokens + cfg.num_prefix_embeds + 8,
+    )
 
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)
-    ).astype(np.int32)
+    rng = np.random.default_rng(0)
+    reqs = [
+        GenRequest(
+            tokens=rng.integers(
+                0, cfg.vocab_size, (int(rng.integers(4, args.prompt_len + 1)),)
+            ).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, args.new_tokens + 1)),
+            temperature=args.temperature,
+            seed=args.seed + i,
+        )
+        for i in range(args.batch)
+    ]
 
-    out = eng.generate(prompts, max_new_tokens=args.new_tokens)  # warm
+    eng.serve(reqs)  # warm (compiles one prefill per bucket + one decode)
     t0 = time.perf_counter()
-    out = eng.generate(prompts, max_new_tokens=args.new_tokens)
+    outs = eng.serve(reqs)
     dt = time.perf_counter() - t0
-    tok_s = args.batch * args.new_tokens / dt
-    print(f"arch={args.arch} (reduced) batch={args.batch}")
-    print(f"generated {out.shape} in {dt*1e3:.1f} ms  ({tok_s:,.0f} tok/s decode)")
-    print("sample continuation:", out[0, args.prompt_len:].tolist())
+    st = eng.stats
+    print(f"arch={args.arch} (reduced) requests={args.batch} slots={args.slots} "
+          f"bucket={args.bucket} temperature={args.temperature}")
+    print(f"served in {dt*1e3:.1f} ms: {args.batch/dt:.1f} req/s, "
+          f"{st.generated_tokens/dt:,.0f} tok/s decode")
+    print(f"dispatches: {st.prefill_dispatches} prefill + {st.decode_dispatches} decode "
+          f"({st.tokens_per_dispatch:.2f} tok/dispatch); "
+          f"padding waste {100*st.padding_frac:.1f}%")
+    print("sample continuation:", outs[0][len(reqs[0].tokens):].tolist())
+
+    # --- the other serving workload: one matrix, many right-hand sides ---
+    n = 512
+    a = make_diagonally_dominant(jax.random.PRNGKey(1), n)
+    svc = SolveService()
+    svc.solve(a, np.asarray(jax.random.normal(jax.random.PRNGKey(2), (n,))))  # warm+factor
+    rhs = [np.asarray(jax.random.normal(jax.random.PRNGKey(10 + i), (n,))) for i in range(32)]
+    t0 = time.perf_counter()
+    tickets = [svc.submit(a, b) for b in rhs]
+    svc.flush()
+    dt = time.perf_counter() - t0
+    sst = svc.stats
+    print(f"solve service: {len(tickets)} RHS vs one {n}x{n} matrix in {dt*1e3:.1f} ms — "
+          f"hit rate {100*sst.hit_rate:.0f}%, {sst.factor_dispatches} factor + "
+          f"{sst.solve_dispatches} solve dispatches")
 
 
 if __name__ == "__main__":

@@ -41,7 +41,7 @@ def terms(r):
     }
 
 
-def bench_compare(before_path: str, after_path: str, max_ratio: float) -> int:
+def bench_compare(before_path: str, after_path: str, max_ratio: float, min_us: float = 0.0) -> int:
     with open(before_path) as f:
         before = json.load(f)
     with open(after_path) as f:
@@ -54,9 +54,11 @@ def bench_compare(before_path: str, after_path: str, max_ratio: float) -> int:
             print(f"| {k} | {before[k]:.1f} | (dropped) | – |")
             continue
         ratio = after[k] / before[k] if before[k] else float("inf")
-        flag = "  <-- REGRESSION" if ratio > max_ratio else ""
+        gated = before[k] >= min_us
+        flag = "  <-- REGRESSION" if ratio > max_ratio and gated else (
+            "  (below noise floor, ungated)" if ratio > max_ratio else "")
         print(f"| {k} | {before[k]:.1f} | {after[k]:.1f} | {ratio:.2f}x |{flag}")
-        if ratio > max_ratio:
+        if ratio > max_ratio and gated:
             regressions.append((k, ratio))
     for k in sorted(set(after) - set(before)):
         print(f"| {k} | (new) | {after[k]:.1f} | – |")
@@ -81,9 +83,14 @@ def main():
                     help="before/after are BENCH_kernels.json snapshots")
     ap.add_argument("--max-ratio", type=float, default=1.5,
                     help="--bench: fail when any shared key slows past this ratio")
+    ap.add_argument("--min-us", type=float, default=0.0,
+                    help="--bench: noise floor — rows whose BEFORE value is "
+                         "under this many us are reported but never gated "
+                         "(sub-5ms interpret-mode calls swing >1.5x "
+                         "run-to-run on this container)")
     args = ap.parse_args()
     if args.bench:
-        sys.exit(bench_compare(args.before, args.after, args.max_ratio))
+        sys.exit(bench_compare(args.before, args.after, args.max_ratio, args.min_us))
     b = load(args.before, args.mesh)
     a = load(args.after, args.mesh)
     keys = args.cells or sorted(set(b) & set(a))

@@ -12,7 +12,12 @@ from . import ebv as _ebv
 from . import blocked as _blocked
 from .solve import lu_solve
 
-__all__ = ["batched_ebv_lu", "batched_lu_solve", "batched_linear_solve"]
+__all__ = [
+    "batched_ebv_lu",
+    "batched_lu_solve",
+    "batched_linear_solve",
+    "batched_linear_solve_many",
+]
 
 batched_ebv_lu = jax.vmap(_ebv.ebv_lu)
 batched_lu_solve = jax.vmap(lu_solve)
@@ -42,3 +47,25 @@ def batched_linear_solve(a: jax.Array, b: jax.Array, *, method: str = "ebv", blo
     else:
         raise ValueError(f"unknown method {method!r}")
     return batched_lu_solve(lu, b)
+
+
+def batched_linear_solve_many(a: jax.Array, bs, *, method: str = "ebv", block: int = 128) -> list[jax.Array]:
+    """Stacked-RHS path over a batch of systems: factor ``a`` ((B, n, n))
+    once, solve every RHS in ``bs`` (each (B, n) or (B, n, m_i)) in one wide
+    batched substitution, and split the columns back per request — the
+    batched analogue of :func:`repro.core.solve.linear_solve_many`."""
+    cols, widths, squeezes = [], [], []
+    for b in bs:
+        squeeze = b.ndim == 2  # (B, n) vector RHS per system
+        bm = b[..., None] if squeeze else b
+        cols.append(bm)
+        widths.append(bm.shape[-1])
+        squeezes.append(squeeze)
+    stacked = jnp.concatenate(cols, axis=-1)
+    x = batched_linear_solve(a, stacked, method=method, block=block)
+    out, c0 = [], 0
+    for w, squeeze in zip(widths, squeezes):
+        blk = x[..., c0 : c0 + w]
+        out.append(blk[..., 0] if squeeze else blk)
+        c0 += w
+    return out

@@ -21,6 +21,10 @@ __all__ = [
     "upper_solve_packed",
     "lu_solve",
     "linear_solve",
+    "stack_rhs",
+    "split_rhs",
+    "lu_solve_stacked",
+    "linear_solve_many",
 ]
 
 
@@ -79,6 +83,66 @@ def upper_solve_packed(u_packed: jax.Array, b: jax.Array) -> jax.Array:
 def lu_solve(lu: jax.Array, b: jax.Array) -> jax.Array:
     """Both substitution phases against a packed EbV factorization."""
     return backward_substitution(lu, forward_substitution(lu, b))
+
+
+# ---------------------------------------------------------------------------
+# stacked-RHS paths — the factor-once/solve-many serving shape.  Many
+# requests against the SAME matrix coalesce into one wide substitution
+# (columns are independent through both sweeps, so the stacked solve is
+# bitwise-identical per column to the per-request solves it replaces).
+# ---------------------------------------------------------------------------
+def stack_rhs(bs) -> tuple[jax.Array, list[int], list[bool]]:
+    """hstack a sequence of (n,) / (n, m_i) RHS into one (n, Σm_i) matrix.
+
+    Returns (stacked, widths, squeezes) — feed the latter two to
+    :func:`split_rhs` to recover the per-request results."""
+    cols, widths, squeezes = [], [], []
+    for b in bs:
+        squeeze = b.ndim == 1
+        bm = b[:, None] if squeeze else b
+        cols.append(bm)
+        widths.append(bm.shape[1])
+        squeezes.append(squeeze)
+    return jnp.concatenate(cols, axis=1), widths, squeezes
+
+
+def split_rhs(x: jax.Array, widths: list[int], squeezes: list[bool]) -> list[jax.Array]:
+    """Inverse of :func:`stack_rhs` on the solved columns."""
+    out, c0 = [], 0
+    for w, squeeze in zip(widths, squeezes):
+        blk = x[:, c0 : c0 + w]
+        out.append(blk[:, 0] if squeeze else blk)
+        c0 += w
+    return out
+
+
+def lu_solve_stacked(lu: jax.Array, bs) -> list[jax.Array]:
+    """Solve one packed factorization against many RHS in ONE wide
+    substitution pass; returns per-request results."""
+    stacked, widths, squeezes = stack_rhs(bs)
+    return split_rhs(lu_solve(lu, stacked), widths, squeezes)
+
+
+def linear_solve_many(a: jax.Array, bs, *, method: str = "ebv_blocked", block: int = 256) -> list[jax.Array]:
+    """Factor ``a`` ONCE, then solve every RHS in ``bs`` via the stacked
+    path (same ``method`` vocabulary as :func:`linear_solve`)."""
+    if method == "auto":
+        from repro.kernels import ops as _kops  # deferred: kernels imports core
+
+        stacked, widths, squeezes = stack_rhs(bs)
+        return split_rhs(_kops.linear_solve(a, stacked, block=block), widths, squeezes)
+    if method == "jnp":
+        stacked, widths, squeezes = stack_rhs(bs)
+        return split_rhs(jnp.linalg.solve(a, stacked), widths, squeezes)
+    if method == "ebv":
+        lu = _ebv.ebv_lu(a)
+    elif method == "ebv_blocked":
+        from . import blocked as _blocked
+
+        lu = _blocked.blocked_lu(a, block=block)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return lu_solve_stacked(lu, bs)
 
 
 @functools.partial(jax.jit, static_argnames=("method", "block"))

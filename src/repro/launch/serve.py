@@ -1,10 +1,11 @@
-"""Serving launcher: batched generation with optional multi-device mesh.
+"""Serving launcher: continuous-batching generation with optional mesh.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_8b --reduced \
-        --devices 8 --mesh 2x4
+        --devices 8 --mesh 2x4 --slots 4 --ragged --temperature 0.8 --seed 3
 """
 import argparse
 import os
+import time
 
 
 def main():
@@ -13,9 +14,17 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--mesh", default="")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="request count")
+    ap.add_argument("--slots", type=int, default=4, help="concurrent batch slots")
+    ap.add_argument("--bucket", type=int, default=8, help="prompt-length shape bucket")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt/new-token lengths across requests")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help=">0 enables per-slot sampled decoding")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed (request i uses seed+i)")
     args = ap.parse_args()
 
     if args.devices:
@@ -24,34 +33,56 @@ def main():
             + os.environ.get("XLA_FLAGS", "")
         )
 
-    import jax
     import numpy as np
     from repro.configs.base import get_config
     from repro.dist import sharding as shlib
     from repro.launch.mesh import parse_mesh_arg
     from repro.models import lm
-    from repro.serve.engine import Engine
+    from repro.serve.engine import Engine, GenRequest
+
+    import jax
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
 
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (args.batch, args.prompt_len)
-    ).astype(np.int32)
-    max_len = args.prompt_len + args.new_tokens + cfg.num_prefix_embeds + 8
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.batch):
+        s0 = args.prompt_len
+        nt = args.new_tokens
+        if args.ragged:
+            s0 = int(rng.integers(max(args.prompt_len // 4, 1), args.prompt_len + 1))
+            nt = int(rng.integers(max(args.new_tokens // 4, 1), args.new_tokens + 1))
+        reqs.append(GenRequest(
+            tokens=rng.integers(0, cfg.vocab_size, (s0,)).astype(np.int32),
+            max_new_tokens=nt, temperature=args.temperature, seed=args.seed + i,
+        ))
+    max_len = args.prompt_len + args.bucket + args.new_tokens + cfg.num_prefix_embeds + 8
+
+    def serve():
+        eng = Engine(params, cfg, max_len=max_len, slots=args.slots, bucket=args.bucket)
+        t0 = time.perf_counter()
+        outs = eng.serve(reqs)
+        return eng, outs, time.perf_counter() - t0
 
     if args.mesh:
         mesh = parse_mesh_arg(args.mesh)
         with shlib.use_mesh_rules(mesh):
-            eng = Engine(params, cfg, max_len=max_len)
-            out = eng.generate(prompts, max_new_tokens=args.new_tokens)
+            eng, outs, dt = serve()
     else:
-        eng = Engine(params, cfg, max_len=max_len)
-        out = eng.generate(prompts, max_new_tokens=args.new_tokens)
+        eng, outs, dt = serve()
 
-    print(f"generated {out.shape}; sample: {out[0, args.prompt_len:].tolist()}")
+    st = eng.stats
+    gen = st.generated_tokens
+    print(f"served {len(reqs)} requests ({gen} new tokens) in {dt*1e3:.1f} ms "
+          f"({len(reqs)/dt:.1f} req/s, {gen/dt:,.0f} tok/s)")
+    print(f"dispatches: {st.prefill_dispatches} prefill + {st.decode_dispatches} decode "
+          f"({st.tokens_per_dispatch:.2f} tok/dispatch)")
+    print(f"padding waste: {100*st.padding_frac:.1f}% of prompt tokens "
+          f"(bucket={args.bucket})")
+    print(f"sample: {outs[0][len(reqs[0].tokens):].tolist()}")
 
 
 if __name__ == "__main__":

@@ -403,9 +403,12 @@ def apply_attention_layer(
 
     modes: ``train`` (no cache), ``prefill`` (full-seq attention, returns a
     freshly built cache of ``cache_len`` slots), ``decode`` (single token
-    against ``cache``).  ``cache``: {"k","v": (B, Sc, KV, Dh), "pos": (Sc,)
-    int32 absolute position per slot, −1 = empty}.  Sliding-window archs use
-    a ring buffer of ``Sc == window`` slots.
+    against ``cache``).  ``cache``: {"k","v": (B, Sc, KV, Dh), "pos":
+    (B, Sc) int32 absolute position per cache slot *per sequence*, −1 =
+    empty}.  Decode positions are per-row (``seq_positions`` (B,)), so each
+    batch slot may sit at a different depth — the substrate of the serving
+    engine's continuous batching.  Sliding-window archs use a ring buffer of
+    ``Sc == window`` slots.
     """
     b, s, _ = x.shape
     h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -447,17 +450,30 @@ def apply_attention_layer(
             new_cache = _build_cache(cfg, k, v, pos1d, cache_len or s)
     elif mode == "decode":
         sc = cache["k"].shape[1]
-        cur = tpos[0, 0] if tpos.ndim > 1 else tpos[0]  # scalar current position
+        # per-row current positions: (B,) — rows advance independently
+        cur = (tpos[0] if tpos.ndim > 1 else tpos).astype(jnp.int32)
+        cur = jnp.broadcast_to(cur, (b,))
         slot = cur % sc if cfg.sliding_window is not None else cur
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
-        cpos = jax.lax.dynamic_update_slice(cache["pos"], cur[None].astype(jnp.int32), (slot,))
-        out = attention(
-            q, ck, cv,
-            q_positions=jnp.full((s,), cur, jnp.int32),
-            kv_positions=cpos,
-            causal=True, window=cfg.sliding_window, kv_chunk=max(sc, 1),
+
+        def row_update(ck_r, cv_r, cp_r, k_r, v_r, sl_r, cu_r):
+            ck_r = jax.lax.dynamic_update_slice(ck_r, k_r.astype(ck_r.dtype), (sl_r, 0, 0))
+            cv_r = jax.lax.dynamic_update_slice(cv_r, v_r.astype(cv_r.dtype), (sl_r, 0, 0))
+            cp_r = jax.lax.dynamic_update_slice(cp_r, cu_r[None], (sl_r,))
+            return ck_r, cv_r, cp_r
+
+        ck, cv, cpos = jax.vmap(row_update)(
+            cache["k"], cache["v"], cache["pos"], k, v, slot, cur
         )
+
+        def row_attn(q_r, k_r, v_r, cu_r, cp_r):
+            return attention(
+                q_r[None], k_r[None], v_r[None],
+                q_positions=jnp.full((s,), cu_r, jnp.int32),
+                kv_positions=cp_r,
+                causal=True, window=cfg.sliding_window, kv_chunk=max(sc, 1),
+            )[0]
+
+        out = jax.vmap(row_attn)(q, ck, cv, cur, cpos)
         new_cache = {"k": ck, "v": cv, "pos": cpos}
     else:
         raise ValueError(mode)
@@ -466,7 +482,11 @@ def apply_attention_layer(
 
 
 def _build_cache(cfg: ModelConfig, k, v, pos1d, cache_len: int):
-    """Prefill → decode cache layout (ring buffer for sliding window)."""
+    """Prefill → decode cache layout (ring buffer for sliding window).
+
+    ``pos`` is materialized per sequence ((B, Sc)) even though prefill
+    positions are uniform across the batch: decode advances rows
+    independently under continuous batching."""
     b, s = k.shape[0], k.shape[1]
     if cfg.sliding_window is not None:
         w = min(cfg.sliding_window, cache_len)
@@ -479,17 +499,17 @@ def _build_cache(cfg: ModelConfig, k, v, pos1d, cache_len: int):
             ck = jnp.roll(ck, shift, axis=1)
             cv = jnp.roll(cv, shift, axis=1)
             cpos = jnp.roll(cpos, shift)
-            return {"k": ck, "v": cv, "pos": cpos}
+            return {"k": ck, "v": cv, "pos": jnp.broadcast_to(cpos[None], (b, w))}
         pad = w - s
         ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
         cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
         cpos = jnp.pad(pos1d.astype(jnp.int32), (0, pad), constant_values=-1)
-        return {"k": ck, "v": cv, "pos": cpos}
+        return {"k": ck, "v": cv, "pos": jnp.broadcast_to(cpos[None], (b, w))}
     pad = cache_len - s
     ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
     cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     cpos = jnp.pad(pos1d.astype(jnp.int32), (0, pad), constant_values=-1)
-    return {"k": ck, "v": cv, "pos": cpos}
+    return {"k": ck, "v": cv, "pos": jnp.broadcast_to(cpos[None], (b, cache_len))}
 
 
 def apply_cross_attention_layer(p, x, cfg: ModelConfig, *, enc_out=None, cross_kv=None):
@@ -522,7 +542,7 @@ def init_attention_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype):
     return {
         "k": jnp.zeros((batch, sc, kv, dh), dtype),
         "v": jnp.zeros((batch, sc, kv, dh), dtype),
-        "pos": jnp.full((sc,), -1, jnp.int32),
+        "pos": jnp.full((batch, sc), -1, jnp.int32),
     }
 
 

@@ -218,9 +218,14 @@ def train_loss(params, batch, cfg: ModelConfig, *, kv_chunk=1024, aux_weight=0.0
     return ce + aux_weight * aux, metrics
 
 
-def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024):
+def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, last=None):
     """Full-sequence forward building the decode cache; returns
-    (caches, last-token logits)."""
+    (caches, last-token logits).
+
+    ``last`` (optional, (B,) int32): per-row index of the token whose logits
+    to return instead of the trailing position — the serving engine prefills
+    right-padded shape-bucketed prompts and samples from each request's true
+    last token (causality keeps those logits untouched by the pad tail)."""
     x, positions, _, enc_out = _embed_inputs(params, batch, cfg, mode="prefill")
     seq_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
     x = constrain(x, ACT_AXES)
@@ -230,31 +235,39 @@ def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024):
         kv_chunk=kv_chunk, cache_len=cache_len, seq_positions=seq_pos,
     )
     x = C.apply_norm(params["ln_f"], x, cfg.norm)
-    last = x[:, -1:]
-    logits = jnp.einsum("bsd,dv->bsv", last, params["unembed"], preferred_element_type=jnp.float32)
+    if last is None:
+        sel = x[:, -1:]
+    else:
+        idx = jnp.asarray(last, jnp.int32)[:, None, None]
+        sel = jnp.take_along_axis(x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[-1])), axis=1)
+    logits = jnp.einsum("bsd,dv->bsv", sel, params["unembed"], preferred_element_type=jnp.float32)
     return caches, logits
 
 
 def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
-    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (uniform
-    across the batch — continuous batching handles raggedness upstream);
-    caches: per-layer-stacked pytree from :func:`prefill` /
-    :func:`init_caches`.  Returns (new_caches, logits (B, 1, V))."""
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (lockstep —
+    every row at the same depth) or (B,) int32 per-row positions (continuous
+    batching: each slot advances independently); caches: per-layer-stacked
+    pytree from :func:`prefill` / :func:`init_caches`.  Returns
+    (new_caches, logits (B, 1, V))."""
     emb = params["embed"]
     x = jnp.take(emb, tokens, axis=0)
     b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
     if cfg.family == "encdec":
-        x = x + _sinusoid(pos[None].astype(jnp.int32), cfg.d_model)[None].astype(x.dtype)
+        x = x + _sinusoid(pos, cfg.d_model)[:, None, :].astype(x.dtype)
     if cfg.mrope_sections is not None:
         # same stream law as mrope_positions for text: val = pos − P + grid.
         # The temporal mask stream (positions[0]) must stay the raw absolute
         # position, so we offset only for rope and let apply_rope consume it;
         # t/h/w coincide for text tokens.
-        mpos = pos.astype(jnp.int32) - cfg.num_prefix_embeds + 16
-        positions = jnp.broadcast_to(mpos, (3, b, 1))
+        mpos = pos - cfg.num_prefix_embeds + 16
+        positions = jnp.broadcast_to(mpos[None, :, None], (3, b, 1))
     else:
-        positions = jnp.broadcast_to(pos.astype(jnp.int32), (b, 1))
-    seq_pos = jnp.broadcast_to(pos.astype(jnp.int32), (1,))
+        positions = pos[:, None]
+    seq_pos = pos
     x, new_caches, _ = _scan_blocks(
         params, x, cfg, positions=positions, mode="decode", caches=caches,
         seq_positions=seq_pos,
@@ -276,7 +289,7 @@ def cache_axes(cfg: ModelConfig):
     ax_attn = {
         "k": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
         "v": ("layers", "cache_batch", "cache_seq", "cache_kv", None),
-        "pos": ("layers", None),
+        "pos": ("layers", "cache_batch", None),
     }
     ax = {}
     if cfg.family in ("dense", "vlm", "moe", "encdec", "hybrid"):

@@ -1,2 +1,11 @@
-"""Batched serving engine (prefill + KV-cache decode)."""
-from .engine import Engine  # noqa: F401
+"""Serving subsystem: continuous-batching generation + solve front end.
+
+* :mod:`repro.serve.scheduler` — shape-bucketed queue, EBV-equalized slot
+  filling, deadline/FIFO ordering, padding stats;
+* :mod:`repro.serve.engine` — slot-based prefill/decode generation engine;
+* :mod:`repro.serve.solve_service` — factor-once/solve-many linear-system
+  service with an LRU factorization cache and coalesced multi-RHS solves.
+"""
+from .engine import Engine, EngineStats, GenRequest  # noqa: F401
+from .scheduler import Scheduler, bucket_length  # noqa: F401
+from .solve_service import SolveService  # noqa: F401

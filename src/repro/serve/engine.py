@@ -1,12 +1,36 @@
-"""Batched serving engine: prefill + decode with KV caches.
+"""Slot-based continuous-batching serving engine.
 
-Static batching with uniform positions (continuous batching raggedness is
-handled upstream by padding into the fixed request grid — the per-slot mask
-lives in the cache ``pos`` arrays).  Greedy or temperature sampling.
+The engine owns a fixed grid of ``slots`` batch rows over one KV cache and
+two jitted entry points:
+
+* ``_prefill`` — full-sequence forward of ONE shape-bucketed prompt
+  ((1, bucket_len); compiled once per bucket), returning the request's
+  cache rows and the logits at its true last token (``last=`` gather —
+  right-pad tokens are causally inert);
+* ``_decode`` — one token for EVERY slot ((slots, 1)) with per-row
+  positions; compiled exactly once.
+
+Slot lifecycle: a request admitted from the scheduler is prefilled and its
+cache rows are scattered into a free slot (``pos`` entries past the true
+prompt length forced to −1 so pad K/V never match); the slot then rides
+every decode dispatch until its token budget is spent, at which point its
+device-side output row is transferred (once — no per-token host sync) and
+the slot is refilled mid-stream from the queue.  Because every per-row
+computation in the model is independent of the other rows, a request's
+tokens are bitwise-identical no matter which slot it lands in or what else
+is in flight (MoE is the one exception: expert capacity couples rows, so
+under-filled tail batches can drop tokens differently than full ones).
+
+Sampling is per-slot: each request owns a PRNG stream derived from its
+``seed`` only (split once at admission, then once per decode step), so
+temperature>0 outputs are also independent of batch composition.
+
+``generate`` is kept as the lockstep-compatible wrapper: one slot per
+prompt row, exact-length buckets, per-row seeds ``seed + i``.
 """
 from __future__ import annotations
 
-import functools
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,17 +38,55 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from .scheduler import Scheduler, bucket_length
+
+__all__ = ["GenRequest", "EngineStats", "Engine"]
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request.  ``seed`` alone determines the sampling
+    stream (slot- and batch-independent); give concurrent requests distinct
+    seeds for independent draws."""
+
+    tokens: np.ndarray  # (S0,) int32 prompt
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    seed: int = 0
+    deadline: float | None = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefill_dispatches: int = 0
+    decode_dispatches: int = 0
+    generated_tokens: int = 0
+    padding_frac: float = 0.0
+    # ("prefill", request_index) / ("decode", active_slot_count) in issue
+    # order — tests assert prefill insertion happens mid-decode from this
+    events: list = dataclasses.field(default_factory=list)
+    sched: object | None = None  # SchedulerStats of the last serve() call
+
+    @property
+    def tokens_per_dispatch(self) -> float:
+        return self.generated_tokens / max(self.decode_dispatches + self.prefill_dispatches, 1)
 
 
 class Engine:
-    def __init__(self, params, cfg: ModelConfig, *, max_len: int = 512, jit_kwargs: dict | None = None):
+    def __init__(
+        self, params, cfg: ModelConfig, *, max_len: int = 512, slots: int = 4,
+        bucket: int = 1, jit_kwargs: dict | None = None,
+    ):
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
+        self.slots = slots
+        self.bucket = bucket
+        self.stats = EngineStats()
         kw = jit_kwargs or {}
 
-        def _prefill(params, batch):
-            return lm.prefill(params, batch, cfg, cache_len=max_len)
+        def _prefill(params, batch, last):
+            return lm.prefill(params, batch, cfg, cache_len=max_len, last=last)
 
         def _decode(params, caches, tokens, pos):
             return lm.decode_step(params, caches, tokens, pos, cfg)
@@ -32,6 +94,9 @@ class Engine:
         self._prefill = jax.jit(_prefill, **kw)
         self._decode = jax.jit(_decode, donate_argnums=(1,), **kw)
 
+    # ------------------------------------------------------------------
+    # request-shaping helpers
+    # ------------------------------------------------------------------
     def _model_batch(self, tokens):
         cfg = self.cfg
         b, s = tokens.shape
@@ -45,33 +110,192 @@ class Engine:
             return {"tokens": jnp.asarray(tokens), "frames": frames.astype(jnp.dtype(cfg.dtype))}
         return {"tokens": jnp.asarray(tokens)}
 
+    @property
+    def _prompt_offset(self) -> int:
+        return self.cfg.num_prefix_embeds if self.cfg.family == "vlm" else 0
+
+    def _bucket_len(self, s0: int, fixed: int | None) -> int:
+        lb = fixed if fixed is not None else bucket_length(s0, self.bucket)
+        w = self.cfg.sliding_window
+        if w is not None and lb > w:
+            # The prefill ring keeps only the last `w` *sequence* positions,
+            # so pad tokens past the window would evict real prompt K/V
+            # before _insert_slot can mask them — pad only while the whole
+            # padded prompt still fits in the ring, else prefill exact.
+            return s0
+        return lb
+
+    # ------------------------------------------------------------------
+    # continuous-batching serve loop
+    # ------------------------------------------------------------------
+    def serve(
+        self, requests, *, slots: int | None = None, equalize: bool = True,
+    ) -> list[np.ndarray]:
+        """Serve ``requests`` (GenRequests) to completion; returns, per
+        request (input order), the (S0_i + max_new_i,) int32 token array."""
+        reqs = list(requests)
+        if not reqs:
+            return []
+        nslots = min(slots or self.slots, len(reqs))
+        offset = self._prompt_offset
+        # encdec cross-attention caches are sized by the encoder length,
+        # which tracks the padded prompt length — pin ONE bucket for the
+        # whole call so every slot's cross cache rows agree.
+        fixed_bucket = None
+        if self.cfg.family == "encdec":
+            fixed_bucket = max(bucket_length(len(r.tokens), self.bucket) for r in reqs)
+        for r in reqs:
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"max_new_tokens must be >= 1, got {r.max_new_tokens} "
+                    "(the first token comes from prefill; a slot holding a "
+                    "zero-budget request would never retire)"
+                )
+            lb = self._bucket_len(len(r.tokens), fixed_bucket)
+            assert lb + offset + r.max_new_tokens <= self.max_len, "max_len too small"
+
+        sched = Scheduler()
+        for i, r in enumerate(reqs):
+            s0 = len(r.tokens)
+            lb = self._bucket_len(s0, fixed_bucket)
+            sched.submit(
+                (i, r), bucket=lb, cost=lb + r.max_new_tokens,
+                deadline=r.deadline, real=s0, padded=lb - s0,
+            )
+
+        self.stats = stats = EngineStats()
+        enc_len = max((fixed_bucket or 0) // 4, 1) if self.cfg.family == "encdec" else 0
+        caches = lm.init_caches(self.cfg, nslots, self.max_len, enc_len=enc_len)
+        out_cap = max(r.max_new_tokens for r in reqs)
+        tok = jnp.zeros((nslots, 1), jnp.int32)
+        pos = jnp.zeros((nslots,), jnp.int32)
+        keys = jnp.zeros((nslots, 2), jnp.uint32)
+        temps = jnp.zeros((nslots,), jnp.float32)
+        out_buf = jnp.zeros((nslots, out_cap), jnp.int32)
+        out_idx = jnp.zeros((nslots,), jnp.int32)
+        active: list[dict | None] = [None] * nslots
+        results: list[np.ndarray | None] = [None] * len(reqs)
+
+        def finish(slot):
+            st = active[slot]
+            r = reqs[st["rid"]]
+            new = np.asarray(out_buf[slot, : r.max_new_tokens])  # ONE transfer
+            results[st["rid"]] = np.concatenate([np.asarray(r.tokens, np.int32), new])
+            stats.generated_tokens += r.max_new_tokens
+            active[slot] = None
+
+        while len(sched) or any(active):
+            free = [s for s in range(nslots) if active[s] is None]
+            if free and len(sched):
+                for sr in sched.take(len(free), equalize=equalize):
+                    slot = free.pop(0)
+                    rid, r = sr.payload
+                    s0 = len(r.tokens)
+                    lb = self._bucket_len(s0, fixed_bucket)
+                    prompt = np.zeros((1, lb), np.int32)
+                    prompt[0, :s0] = np.asarray(r.tokens, np.int32)
+                    last = jnp.asarray([s0 + offset - 1], jnp.int32)
+                    new_caches, logits = self._prefill(
+                        self.params, self._model_batch(prompt), last
+                    )
+                    stats.prefill_dispatches += 1
+                    stats.events.append(("prefill", rid))
+                    valid = s0 + offset
+                    caches = _insert_slot(caches, new_caches, slot, valid)
+                    # split before first use (same key discipline the
+                    # lockstep engine regression-tested): the root key is
+                    # never consumed directly
+                    key, sub = jax.random.split(jax.random.PRNGKey(r.seed))
+                    t0 = self._sample(
+                        logits[:, -1], jnp.asarray([r.temperature], jnp.float32), sub[None]
+                    )
+                    tok = tok.at[slot].set(t0[0])
+                    pos = pos.at[slot].set(valid)
+                    keys = keys.at[slot].set(key)
+                    temps = temps.at[slot].set(r.temperature)
+                    out_buf = out_buf.at[slot].set(
+                        jnp.zeros((out_cap,), jnp.int32).at[0].set(t0[0, 0])
+                    )
+                    out_idx = out_idx.at[slot].set(1)
+                    active[slot] = {"rid": rid, "left": r.max_new_tokens - 1}
+                    if active[slot]["left"] == 0:
+                        finish(slot)
+                        free.insert(0, slot)
+            if not any(active):
+                continue
+            split2 = jax.vmap(lambda k: jax.random.split(k))(keys)  # (S, 2, 2)
+            keys, subs = split2[:, 0], split2[:, 1]
+            caches, logits = self._decode(self.params, caches, tok, pos)
+            stats.decode_dispatches += 1
+            stats.events.append(("decode", sum(a is not None for a in active)))
+            tok = self._sample(logits[:, -1], temps, subs)
+            out_buf = jax.vmap(
+                lambda row, t, i: jax.lax.dynamic_update_slice(row, t, (i,))
+            )(out_buf, tok[:, 0:1], out_idx)
+            out_idx = out_idx + 1
+            pos = pos + 1
+            for slot in range(nslots):
+                if active[slot] is not None:
+                    active[slot]["left"] -= 1
+                    if active[slot]["left"] == 0:
+                        finish(slot)
+        stats.padding_frac = sched.stats.padding_frac
+        stats.sched = sched.stats
+        return results  # type: ignore[return-value]
+
+    # ------------------------------------------------------------------
+    # lockstep-compatible wrapper
+    # ------------------------------------------------------------------
     def generate(
         self, prompts: np.ndarray, *, max_new_tokens: int = 32,
         temperature: float = 0.0, seed: int = 0,
     ) -> np.ndarray:
-        """prompts: (B, S0) int32 → (B, S0 + max_new_tokens) int32."""
+        """prompts: (B, S0) int32 → (B, S0 + max_new_tokens) int32.
+
+        Runs the serve loop with one slot per row and exact-length buckets
+        (no padding).  Row ``i`` samples from seed ``seed + i`` so rows
+        draw independently; tokens accumulate in the device-side buffer and
+        transfer once per row (the old loop synced the host every token)."""
         prompts = np.asarray(prompts, np.int32)
         b, s0 = prompts.shape
-        prompt_offset = self.cfg.num_prefix_embeds if self.cfg.family == "vlm" else 0
-        assert s0 + prompt_offset + max_new_tokens <= self.max_len, "max_len too small"
-        caches, logits = self._prefill(self.params, self._model_batch(prompts))
-        # Split before the first use: sampling with the root key and then
-        # re-splitting it would correlate the first sampled token with every
-        # later step's subkey stream.
-        key, sub = jax.random.split(jax.random.PRNGKey(seed))
-        out = [prompts]
-        tok = self._sample(logits[:, -1], temperature, sub)
-        pos = s0 + prompt_offset
-        for i in range(max_new_tokens - 1):
-            out.append(np.asarray(tok))
-            caches, logits = self._decode(self.params, caches, tok, jnp.asarray(pos + i, jnp.int32))
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits[:, -1], temperature, sub)
-        out.append(np.asarray(tok))
-        return np.concatenate(out, axis=1)
+        reqs = [
+            GenRequest(
+                tokens=prompts[i], max_new_tokens=max_new_tokens,
+                temperature=temperature, seed=seed + i,
+            )
+            for i in range(b)
+        ]
+        out = self.serve(reqs, slots=b)
+        return np.stack(out)
 
     def _sample(self, logits, temperature, key):
         logits = logits[:, : self.cfg.vocab_size]  # drop padded vocab tail
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)[:, None]
+        t = jnp.asarray(temperature, jnp.float32)
+        key = jnp.asarray(key)
+        if t.ndim == 0 and key.ndim == 1:
+            # legacy lockstep signature: one stream for the whole batch
+            if float(t) <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return jax.random.categorical(key, logits / t, axis=-1).astype(jnp.int32)[:, None]
+        t = jnp.broadcast_to(t, (logits.shape[0],))
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        safe = jnp.where(t > 0.0, t, 1.0)
+        sampled = jax.vmap(jax.random.categorical)(key, logits / safe[:, None]).astype(jnp.int32)
+        return jnp.where(t > 0.0, sampled, greedy)[:, None]
+
+
+def _insert_slot(live, new, slot: int, valid_len: int):
+    """Scatter a prefilled (batch-1) cache pytree into row ``slot`` of the
+    live caches.  ``pos`` leaves are masked by *position value* (>=
+    ``valid_len`` → −1) so bucket-pad K/V slots can never be attended.
+    For sliding-window caches this relies on ``Engine._bucket_len`` keeping
+    the padded prompt inside the ring (pads past the window would evict
+    real K/V before this mask could catch them)."""
+
+    def fix(path, lv, nw):
+        row = nw[:, 0]
+        if path and getattr(path[-1], "key", None) == "pos":
+            row = jnp.where((row >= 0) & (row < valid_len), row, -1)
+        return lv.at[:, slot].set(row)
+
+    return jax.tree_util.tree_map_with_path(fix, live, new)

@@ -1,0 +1,157 @@
+"""Shape-bucketed request queue with EBV-style equalized slot filling.
+
+The scheduler is the admission layer shared by the generation engine
+(:mod:`repro.serve.engine`) and the linear-system front end
+(:mod:`repro.serve.solve_service`).  It is payload-agnostic: callers submit
+opaque payloads tagged with a *bucket* (the dispatch shape the payload pads
+to — prompt-length bucket for LM requests, ``(structure, n, bw, dtype)``
+for solve requests), a *cost* estimate, and an optional *deadline*.
+
+Ordering is earliest-deadline-first, then FIFO.  Requests that carry a
+deadline are never reordered past one another and always admit ahead of
+deadline-free traffic.
+
+**Equalized slot filling** (the paper's eq.-7 pairing, applied to the
+request queue): when ``k`` slots free simultaneously, picking the first
+``k`` FIFO requests can hand every slot a heavy request — they all finish
+late together and the next dispatches run underfull.  Instead the scheduler
+looks at a bounded window (``2k``) of deadline-free eligible requests,
+sorts it by cost, and picks ``k`` via the fold order
+(:func:`repro.core.ebv.fold_index`: heaviest, lightest, 2nd-heaviest,
+2nd-lightest, …) so each admitted batch mixes long- and short-lived
+occupants and the slots turn over at staggered, balanced times — every
+decode dispatch stays a full batch.  The window bound keeps the reordering
+fair: a request can be overtaken at most once before it is in the front
+``k`` of the window and must be picked.
+
+Padding accounting: the caller reports real vs padded sizes at submission
+(``real=``, ``padded=``); ``stats.padding_frac`` is the fraction of
+dispatched prompt tokens that were bucket padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Hashable
+
+from repro.core.ebv import fold_index
+
+__all__ = ["ScheduledRequest", "SchedulerStats", "Scheduler", "bucket_length"]
+
+
+def bucket_length(n: int, bucket: int) -> int:
+    """Round ``n`` up to the enclosing shape bucket (multiple of ``bucket``)."""
+    if bucket <= 1:
+        return n
+    return -(-n // bucket) * bucket
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    """One queue entry.  ``cost`` is the slot-occupancy estimate the
+    equalizer balances (for LM requests: padded prompt + new tokens)."""
+
+    payload: Any
+    bucket: Hashable
+    cost: float = 1.0
+    deadline: float | None = None
+    seq: int = 0
+    real: int = 0
+    padded: int = 0
+
+    @property
+    def priority(self) -> tuple:
+        return (self.deadline if self.deadline is not None else math.inf, self.seq)
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    submitted: int = 0
+    admitted: int = 0
+    real_tokens: int = 0
+    padding_tokens: int = 0
+    equalized_picks: int = 0
+
+    @property
+    def padding_frac(self) -> float:
+        tot = self.real_tokens + self.padding_tokens
+        return self.padding_tokens / tot if tot else 0.0
+
+
+class Scheduler:
+    def __init__(self):
+        self._queue: list[ScheduledRequest] = []
+        self._seq = itertools.count()
+        self.stats = SchedulerStats()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(
+        self,
+        payload: Any,
+        *,
+        bucket: Hashable = None,
+        cost: float = 1.0,
+        deadline: float | None = None,
+        real: int = 0,
+        padded: int = 0,
+    ) -> ScheduledRequest:
+        req = ScheduledRequest(
+            payload=payload, bucket=bucket, cost=cost, deadline=deadline,
+            seq=next(self._seq), real=real, padded=padded,
+        )
+        self._queue.append(req)
+        self.stats.submitted += 1
+        return req
+
+    def buckets(self) -> dict[Hashable, int]:
+        """Pending request count per shape bucket."""
+        out: dict[Hashable, int] = {}
+        for r in self._queue:
+            out[r.bucket] = out.get(r.bucket, 0) + 1
+        return out
+
+    def take(self, k: int, *, equalize: bool = True) -> list[ScheduledRequest]:
+        """Admit up to ``k`` requests.
+
+        Deadline-bearing requests go first, in strict EDF order.  Remaining
+        slots fill from the FIFO front window of deadline-free requests with
+        the equalized fold pick (see module docstring); ``equalize=False``
+        degrades to plain FIFO."""
+        if k <= 0 or not self._queue:
+            return []
+        with_dl = sorted(
+            (r for r in self._queue if r.deadline is not None), key=lambda r: r.priority
+        )
+        picked: list[ScheduledRequest] = with_dl[:k]
+        rest = k - len(picked)
+        if rest > 0:
+            fifo = sorted(
+                (r for r in self._queue if r.deadline is None), key=lambda r: r.seq
+            )
+            window = fifo[: 2 * rest]
+            if equalize and len(window) > rest:
+                by_cost = sorted(window, key=lambda r: (-r.cost, r.seq))
+                picked += [by_cost[fold_index(i, len(by_cost))] for i in range(rest)]
+                self.stats.equalized_picks += rest
+            else:
+                picked += window[:rest]
+        for r in picked:
+            self._queue.remove(r)
+            self.stats.admitted += 1
+            self.stats.real_tokens += r.real
+            self.stats.padding_tokens += r.padded
+        return picked
+
+    def drain(self) -> list[ScheduledRequest]:
+        """All pending requests in priority order (used by batch front ends
+        that coalesce the whole queue, e.g. the solve service)."""
+        out = sorted(self._queue, key=lambda r: r.priority)
+        for r in out:
+            self.stats.admitted += 1
+            self.stats.real_tokens += r.real
+            self.stats.padding_tokens += r.padded
+        self._queue.clear()
+        return out

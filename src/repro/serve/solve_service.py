@@ -1,0 +1,189 @@
+"""Linear-system serving front end: factor once, solve many.
+
+The dominant real traffic shape for a solver service is GLU3.0's
+circuit-simulation pattern — the SAME matrix arrives over and over with
+fresh right-hand sides (transient timesteps, Monte-Carlo sweeps, parameter
+scans).  The service exploits it twice:
+
+* **factorization cache** — an LRU keyed by matrix *fingerprint*
+  (content hash of bytes + shape + dtype + bandwidth).  A hit skips the
+  factorization dispatch entirely and jumps straight to substitution;
+* **RHS coalescing** — pending requests against one fingerprint hstack
+  their RHS columns into a single wide solve dispatch
+  (:func:`repro.core.solve.stack_rhs`).  Substitution columns are
+  independent, so the coalesced results are bitwise-identical to
+  per-request solves while paying one kernel launch.
+
+Everything routes through :class:`repro.solvers.Problem` descriptors and
+the registry, so the autotuned backend selection (and its multi-RHS
+capability filter — e.g. the vector-only scalar banded solve is pruned when
+``rhs > 1``) decides *how* each coalesced dispatch runs.  Dispatch counts in
+``stats`` come from the registry's dispatch hook, not from self-reporting.
+
+Admission/ordering rides the shared :class:`repro.serve.scheduler.Scheduler`
+(buckets = ``(structure, n, bw, dtype)``; deadline/FIFO order decides which
+matrix group flushes first).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import solvers
+from repro.kernels import ops as kops
+from repro.core.solve import split_rhs, stack_rhs
+from .scheduler import Scheduler
+
+__all__ = ["SolveRequest", "SolveServiceStats", "SolveService", "fingerprint"]
+
+
+def fingerprint(a, *, bw: int = 0) -> str:
+    """Content hash identifying a matrix operand (dense or row-aligned
+    band): sha1 over the raw bytes + shape + dtype + bandwidth."""
+    arr = np.asarray(a)
+    h = hashlib.sha1()
+    h.update(str((arr.shape, arr.dtype.str, int(bw))).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class SolveRequest:
+    ticket: int
+    fp: str
+    a: object  # matrix operand (kept until its group's factor lands in cache)
+    b: object  # RHS (n,) or (n, m)
+    bw: int
+    deadline: float | None = None
+
+
+@dataclasses.dataclass
+class SolveServiceStats:
+    requests: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_evictions: int = 0
+    factor_dispatches: int = 0
+    solve_dispatches: int = 0
+    coalesced_requests: int = 0  # requests that shared a solve dispatch
+    solved_columns: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.cache_hits + self.cache_misses
+        return self.cache_hits / tot if tot else 0.0
+
+
+class SolveService:
+    """Batch front end over the solver registry.
+
+    ``submit`` enqueues; ``flush`` drains the queue grouped by matrix
+    fingerprint — one factorization dispatch per *cold* matrix, one
+    coalesced stacked-RHS solve dispatch per (matrix, RHS-width-compatible)
+    group — and returns ``{ticket: solution}``.  ``solve`` is the
+    submit+flush convenience for a single request.
+    """
+
+    def __init__(self, *, cache_entries: int = 16):
+        self.cache_entries = cache_entries
+        self._lru: OrderedDict[str, object] = OrderedDict()  # fp -> packed factors
+        self._sched = Scheduler()
+        self._tickets = 0
+        self._done: dict[int, object] = {}  # flushed, not yet redeemed
+        self.stats = SolveServiceStats()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, a, b, *, bw: int = 0, deadline: float | None = None) -> int:
+        """Enqueue ``a x = b`` (``bw > 0`` = row-aligned band operand);
+        returns a ticket redeemable at the next :meth:`flush`."""
+        a = jnp.asarray(a)
+        b = jnp.asarray(b)
+        ticket = self._tickets
+        self._tickets += 1
+        req = SolveRequest(
+            ticket=ticket, fp=fingerprint(a, bw=bw), a=a, b=b, bw=bw, deadline=deadline
+        )
+        n = int(a.shape[-2]) if bw else int(a.shape[-1])
+        structure = "banded" if bw else "dense"
+        cols = 1 if b.ndim == 1 else int(b.shape[-1])
+        self._sched.submit(
+            req, bucket=(structure, n, bw, str(a.dtype)), cost=float(cols),
+            deadline=deadline, real=cols,
+        )
+        self.stats.requests += 1
+        return ticket
+
+    def pending(self) -> int:
+        return len(self._sched)
+
+    # -- factorization cache ------------------------------------------------
+    def _factors_for(self, req: SolveRequest):
+        if req.fp in self._lru:
+            self.stats.cache_hits += 1
+            self._lru.move_to_end(req.fp)
+            return self._lru[req.fp]
+        self.stats.cache_misses += 1
+        if req.bw:
+            factors = kops.banded_lu(req.a, bw=req.bw)
+        else:
+            factors = kops.lu(req.a)
+        self._lru[req.fp] = factors
+        while len(self._lru) > self.cache_entries:
+            self._lru.popitem(last=False)
+            self.stats.cache_evictions += 1
+        return factors
+
+    # -- the flush ----------------------------------------------------------
+    def flush(self) -> dict[int, object]:
+        """Serve every pending request; returns ``{ticket: x}`` for the
+        whole drained queue.  Results are also retained until redeemed via
+        :meth:`result`, so a convenience :meth:`solve` draining the queue
+        cannot lose earlier submissions' answers."""
+        counting = solvers.add_dispatch_hook(self._count_dispatch)
+        try:
+            results: dict[int, object] = {}
+            groups: OrderedDict[str, list[SolveRequest]] = OrderedDict()
+            for entry in self._sched.drain():
+                groups.setdefault(entry.payload.fp, []).append(entry.payload)
+            for fp, reqs in groups.items():
+                factors = self._factors_for(reqs[0])
+                # hit/miss accounting is per REQUEST: coalesced group members
+                # past the leader are served without a factorization too
+                self.stats.cache_hits += len(reqs) - 1
+                stacked, widths, squeezes = stack_rhs([r.b for r in reqs])
+                self.stats.solved_columns += int(stacked.shape[-1])
+                if len(reqs) > 1:
+                    self.stats.coalesced_requests += len(reqs)
+                if reqs[0].bw:
+                    x = kops.banded_solve(factors, stacked, bw=reqs[0].bw)
+                else:
+                    x = kops.lu_solve(factors, stacked)
+                for r, xr in zip(reqs, split_rhs(x, widths, squeezes)):
+                    results[r.ticket] = xr
+            self._done.update(results)
+            return results
+        finally:
+            solvers.remove_dispatch_hook(counting)
+
+    def result(self, ticket: int):
+        """Redeem (pop) a flushed ticket; raises KeyError if the ticket was
+        never flushed or was already redeemed."""
+        return self._done.pop(ticket)
+
+    def solve(self, a, b, *, bw: int = 0):
+        """submit + flush for one request (still hits/extends the cache).
+        Other pending requests flushed alongside stay redeemable via
+        :meth:`result`."""
+        ticket = self.submit(a, b, bw=bw)
+        self.flush()
+        return self.result(ticket)
+
+    def _count_dispatch(self, problem, backend) -> None:
+        if problem.op == "factor":
+            self.stats.factor_dispatches += 1
+        elif problem.op in ("solve", "linear_solve"):
+            self.stats.solve_dispatches += 1

@@ -16,7 +16,18 @@ Public ops in :mod:`repro.kernels.ops` are a thin compatibility shim over
 :func:`select`/:func:`dispatch`; see ``README.md`` in this directory.
 """
 from .problem import Problem, OPS, STRUCTURES
-from .registry import Backend, backends_for, candidates, dispatch, get_backend, register, select
+from .registry import (
+    Backend,
+    add_dispatch_hook,
+    backends_for,
+    candidates,
+    dispatch,
+    get_backend,
+    record_dispatches,
+    register,
+    remove_dispatch_hook,
+    select,
+)
 from .cache import AutotuneCache, get_cache, cache_path, invalidate
 from . import backends as _backends  # noqa: F401  (side effect: registration)
 
@@ -31,6 +42,9 @@ __all__ = [
     "get_backend",
     "select",
     "dispatch",
+    "add_dispatch_hook",
+    "remove_dispatch_hook",
+    "record_dispatches",
     "AutotuneCache",
     "get_cache",
     "cache_path",

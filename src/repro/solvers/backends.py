@@ -269,8 +269,12 @@ register(Backend(
 ))
 register(Backend(
     name="xla_scalar", op="solve", structure="banded",
+    # multi-RHS capability slot: the scalar sweep is vector-only (its padded
+    # carry is 1-D), so a coalesced stacked-RHS dispatch (serve.solve_service)
+    # must never be steered here even when the measured cache (keyed without
+    # rhs) says it wins for vector solves.
     call=lambda p, lub, b, *, bw, **_: _core_banded.banded_solve(lub, b, bw=bw),
-    supports=_local,
+    supports=lambda p: _local(p) and p.rhs <= 1,
     priority=lambda p: 0.5,  # statically dominated; wins via measurement on
                              # this container (BENCH_kernels.json, banded_solve_*)
 ))
@@ -293,9 +297,14 @@ register(Backend(
 ))
 register(Backend(
     name="pallas_vmem", op="solve", structure="batched_dense",
+    # rhs-aware capability: each grid program holds its whole (n, rhs) RHS
+    # in VMEM next to the (n, n) factors, so a wide coalesced stack must
+    # overflow to the vmapped mirror rather than the kernel.
     call=lambda p, lu, b, *, interpret=None, **_: _kbatched.batched_lu_solve_vmem(lu, b, interpret=interpret),
-    supports=lambda p: _is_f32(p) and _local(p) and p.n <= BATCHED_VMEM_MAX_N,
+    supports=lambda p: _is_f32(p) and _local(p) and p.n <= BATCHED_VMEM_MAX_N
+        and max(p.rhs, 1) <= 4 * p.n,
     priority=lambda p: 2.0,
+    vmem_bytes=lambda p: (2 * p.n * p.n + 2 * p.n * max(p.rhs, 1)) * _itemsize(p),
 ))
 register(Backend(
     name="xla", op="solve", structure="batched_dense",
@@ -323,10 +332,15 @@ register(Backend(
 ))
 register(Backend(
     name="pallas_vmem", op="solve", structure="batched_banded",
+    # rhs-aware: the per-program RHS ((n, rhs)) shares VMEM with the skewed
+    # band, so both must fit under the banded byte cap.
     call=lambda p, lub, b, *, bw, block=None, interpret=None, **_:
         _kbanded.batched_banded_solve_vmem(lub, b, bw=bw, block=block, interpret=interpret),
-    supports=lambda p: _is_f32(p) and _local(p) and _banded_skew_bytes(p) <= BANDED_VMEM_MAX_BYTES,
+    supports=lambda p: _is_f32(p) and _local(p)
+        and _banded_skew_bytes(p) + 2 * p.n * max(p.rhs, 1) * _itemsize(p)
+            <= BANDED_VMEM_MAX_BYTES,
     priority=lambda p: 2.0,
+    vmem_bytes=lambda p: 2 * _banded_skew_bytes(p) + 2 * p.n * max(p.rhs, 1) * _itemsize(p),
 ))
 register(Backend(
     name="xla", op="solve", structure="batched_banded",

@@ -37,6 +37,9 @@ __all__ = [
     "candidates",
     "select",
     "dispatch",
+    "add_dispatch_hook",
+    "remove_dispatch_hook",
+    "record_dispatches",
 ]
 
 
@@ -132,6 +135,49 @@ def select(
     return max(cands, key=lambda b: b.priority(problem))
 
 
+# ---------------------------------------------------------------------------
+# dispatch observability — the hook layer higher-level caches build on.
+# The serving layer's factorization cache (repro.serve.solve_service) counts
+# factor vs solve dispatches through here to prove factor-once/solve-many;
+# tests and benches use record_dispatches() for the same accounting.
+# ---------------------------------------------------------------------------
+_DISPATCH_HOOKS: list[Callable[[Problem, Backend], None]] = []
+
+
+def add_dispatch_hook(fn: Callable[[Problem, Backend], None]) -> Callable:
+    """Register ``fn(problem, backend)`` to observe every registry dispatch
+    (called after selection, before the backend runs).  Returns ``fn`` so it
+    can be handed straight to :func:`remove_dispatch_hook`."""
+    _DISPATCH_HOOKS.append(fn)
+    return fn
+
+
+def remove_dispatch_hook(fn: Callable) -> None:
+    try:
+        _DISPATCH_HOOKS.remove(fn)
+    except ValueError:
+        pass
+
+
+class record_dispatches:
+    """Context manager collecting ``(problem, backend_name)`` for every
+    dispatch inside the block::
+
+        with record_dispatches() as log:
+            ops.linear_solve(a, b)
+        assert sum(p.op == "factor" for p, _ in log) == 1
+    """
+
+    def __enter__(self) -> list[tuple[Problem, str]]:
+        self.log: list[tuple[Problem, str]] = []
+        self._fn = add_dispatch_hook(lambda p, b: self.log.append((p, b.name)))
+        return self.log
+
+    def __exit__(self, *exc):
+        remove_dispatch_hook(self._fn)
+        return False
+
+
 def dispatch(
     problem: Problem,
     *arrays,
@@ -142,4 +188,6 @@ def dispatch(
 ):
     """Select and run in one step (the public ops' workhorse)."""
     backend = select(problem, impl=impl, cache=cache, allow=allow)
+    for hook in _DISPATCH_HOOKS:
+        hook(problem, backend)
     return backend.call(problem, *arrays, **kw)

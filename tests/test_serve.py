@@ -1,4 +1,5 @@
-"""Serving engine tests: batched generation, greedy correctness."""
+"""Serving engine tests: continuous batching, ragged bitwise identity,
+prefill insertion mid-decode, per-slot sampling independence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -6,7 +7,8 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.models import lm
-from repro.serve.engine import Engine
+from repro.serve.engine import Engine, GenRequest
+from repro.serve.scheduler import Scheduler, bucket_length
 
 
 @pytest.fixture(scope="module")
@@ -16,6 +18,30 @@ def setup():
     return cfg, params
 
 
+@pytest.fixture(scope="module")
+def ragged_engine(setup):
+    """One shared engine for the ragged suite so every test reuses the same
+    compiled _prefill/_decode (slots=4, bucket=4)."""
+    cfg, params = setup
+    return Engine(params, cfg, max_len=64, slots=4, bucket=4)
+
+
+def _ragged_requests(cfg, *, temperature=0.0):
+    rng = np.random.default_rng(42)
+    lens = [3, 9, 5, 12, 2, 7, 4, 10]
+    news = [9, 2, 5, 3, 11, 4, 6, 2]
+    return [
+        GenRequest(
+            tokens=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+            max_new_tokens=n, temperature=temperature, seed=100 + i,
+        )
+        for i, (s, n) in enumerate(zip(lens, news))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# lockstep-compatible generate()
+# ---------------------------------------------------------------------------
 def test_generate_shapes_and_determinism(setup):
     cfg, params = setup
     eng = Engine(params, cfg, max_len=64)
@@ -30,7 +56,7 @@ def test_generate_shapes_and_determinism(setup):
 
 def test_greedy_matches_teacher_forcing(setup):
     """Each greedy token equals argmax of a fresh full forward over the
-    prefix — validates incremental decode against the stateless model."""
+    prefix — validates incremental slot decode against the stateless model."""
     cfg, params = setup
     eng = Engine(params, cfg, max_len=64)
     prompts = np.random.default_rng(1).integers(0, cfg.vocab_size, (2, 6)).astype(np.int32)
@@ -48,29 +74,31 @@ def test_sampled_generation(setup):
     prompts = np.zeros((2, 4), np.int32)
     out = eng.generate(prompts, max_new_tokens=4, temperature=1.0, seed=7)
     assert out.shape == (2, 8)
+    # rows carry distinct per-request seeds -> independent draws
+    assert not np.array_equal(out[0, 4:], out[1, 4:])
 
 
 def test_sample_keys_distinct_from_root(setup):
-    """Regression: the first _sample used to consume the root PRNG key that
-    was then re-split for later steps, correlating the first token with the
-    rest of the stream.  Every per-step key must differ from the root and
-    from each other."""
+    """Regression (lockstep engine): the first _sample used to consume the
+    root PRNG key that was then re-split for later steps.  The slot engine
+    keeps the discipline per request: every per-step subkey must differ from
+    the root key and from each other."""
     cfg, params = setup
     eng = Engine(params, cfg, max_len=32)
     seen = []
     orig = eng._sample
 
     def spy(logits, temperature, key):
-        seen.append(np.asarray(key).copy())
+        seen.append(np.asarray(key).copy().reshape(-1, 2))
         return orig(logits, temperature, key)
 
     eng._sample = spy
     eng.generate(np.zeros((1, 4), np.int32), max_new_tokens=4, temperature=1.0, seed=3)
-    assert len(seen) == 4
+    assert len(seen) == 4  # 1 prefill sample + 3 decode samples
     root = np.asarray(jax.random.PRNGKey(3))
-    for k in seen:
-        assert not np.array_equal(k, root)
-    assert len({tuple(k.tolist()) for k in seen}) == len(seen)
+    flat = [tuple(k[0].tolist()) for k in seen]
+    assert tuple(root.tolist()) not in flat
+    assert len(set(flat)) == len(flat)
 
 
 def test_moe_engine_smoke():
@@ -79,3 +107,157 @@ def test_moe_engine_smoke():
     eng = Engine(params, cfg, max_len=32)
     out = eng.generate(np.ones((2, 4), np.int32), max_new_tokens=3)
     assert out.shape == (2, 7)
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+def test_ragged_bitwise_identical_to_solo_and_fewer_dispatches(ragged_engine, setup):
+    """Acceptance: mixed prompt lengths / new-token counts across 8 requests
+    through the 4-slot scheduler produce per-request outputs bitwise equal
+    to serving each request alone, with strictly fewer _decode dispatches
+    than the lockstep engine would need."""
+    cfg, _ = setup
+    eng = ragged_engine
+    reqs = _ragged_requests(cfg)
+    outs = eng.serve(reqs)
+    batched = eng.stats
+    assert batched.prefill_dispatches == len(reqs)
+    # prefill insertion happened mid-stream: some request was prefilled
+    # AFTER the first decode dispatch (slots freed and were refilled)
+    kinds = [k for k, _ in batched.events]
+    assert "prefill" in kinds[kinds.index("decode"):]
+
+    for r, out in zip(reqs, outs):
+        assert out.shape == (len(r.tokens) + r.max_new_tokens,)
+        solo = eng.serve([r])[0]
+        np.testing.assert_array_equal(out, solo)  # bitwise
+
+    # lockstep engine: groups of `slots` in arrival order, every group pays
+    # its max new-token count, minus the token that comes from prefill
+    slots = 4
+    lockstep = sum(
+        max(r.max_new_tokens for r in reqs[i : i + slots]) - 1
+        for i in range(0, len(reqs), slots)
+    )
+    assert batched.decode_dispatches < lockstep
+    assert batched.generated_tokens == sum(r.max_new_tokens for r in reqs)
+
+
+def test_ragged_sampled_slot_independent(ragged_engine, setup):
+    """temperature>0: a request's sampled stream depends only on its seed —
+    not on which slot it lands in or what else is in flight."""
+    cfg, _ = setup
+    eng = ragged_engine
+    reqs = _ragged_requests(cfg, temperature=1.0)
+    outs = eng.serve(reqs)
+    # same request alone (lands in slot 0 instead of wherever it was)
+    for i in (1, 3, 6):
+        solo = eng.serve([reqs[i]])[0]
+        np.testing.assert_array_equal(outs[i], solo)
+    # identical prompt, different seed -> different draw
+    twin = GenRequest(
+        tokens=reqs[0].tokens, max_new_tokens=reqs[0].max_new_tokens,
+        temperature=1.0, seed=reqs[0].seed + 777,
+    )
+    solo0 = eng.serve([reqs[0]])[0]
+    solo_twin = eng.serve([twin])[0]
+    assert not np.array_equal(solo0, solo_twin)
+
+
+def test_padding_stats(ragged_engine, setup):
+    cfg, _ = setup
+    eng = ragged_engine
+    reqs = _ragged_requests(cfg)
+    eng.serve(reqs)
+    st = eng.stats
+    want_real = sum(len(r.tokens) for r in reqs)
+    want_pad = sum(bucket_length(len(r.tokens), 4) - len(r.tokens) for r in reqs)
+    assert st.sched.real_tokens == want_real
+    assert st.sched.padding_tokens == want_pad
+    assert st.padding_frac == pytest.approx(want_pad / (want_real + want_pad))
+
+
+@pytest.mark.parametrize("arch", ["qwen2_vl_2b", "whisper_tiny", "mamba2_1_3b", "hymba_1_5b"])
+def test_families_serve_ragged_solo_identical(arch):
+    """Every cache family (vlm prefix offset, encdec cross caches, ssm
+    recurrent state, hybrid both) survives ragged slot serving, and the
+    first request's output matches its solo serve bitwise."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, max_len=64, slots=2, bucket=4)
+    rng = np.random.default_rng(0)
+    reqs = [
+        GenRequest(tokens=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+                   max_new_tokens=n, seed=i)
+        for i, (s, n) in enumerate([(5, 4), (8, 2), (3, 6)])
+    ]
+    outs = eng.serve(reqs)
+    for r, o in zip(reqs, outs):
+        assert o.shape == (len(r.tokens) + r.max_new_tokens,)
+    np.testing.assert_array_equal(outs[0], eng.serve([reqs[0]])[0])
+
+
+# ---------------------------------------------------------------------------
+# scheduler unit behaviour
+# ---------------------------------------------------------------------------
+def test_scheduler_equalized_fill_mixes_heavy_and_light():
+    sched = Scheduler()
+    costs = [10, 11, 12, 13, 1, 2, 3, 4]
+    for i, c in enumerate(costs):
+        sched.submit(i, bucket=0, cost=c)
+    picked = sched.take(4)
+    got = sorted(r.cost for r in picked)
+    # plain FIFO would take [10, 11, 12, 13]; the fold pick must mix ends
+    assert got != [10, 11, 12, 13]
+    assert max(got) >= 12 and min(got) <= 2
+    # everything still drains
+    assert len(sched.take(4, equalize=False)) == 4
+    assert len(sched) == 0
+
+
+def test_scheduler_deadline_beats_fifo():
+    sched = Scheduler()
+    for i in range(4):
+        sched.submit(f"fifo{i}", bucket=0, cost=1)
+    sched.submit("urgent", bucket=0, cost=100, deadline=1.0)
+    picked = sched.take(2)
+    assert picked[0].payload == "urgent"
+
+
+def test_scheduler_fifo_window_bounds_overtaking():
+    """A deadline-free request can be overtaken only within the 2k window —
+    the front of the queue is always admitted."""
+    sched = Scheduler()
+    sched.submit("first", bucket=0, cost=1)  # lightest, oldest
+    for i in range(10):
+        sched.submit(f"r{i}", bucket=0, cost=5 + i)
+    picked = sched.take(2)  # window = first 4 submissions
+    payloads = {r.payload for r in picked}
+    assert payloads <= {"first", "r0", "r1", "r2"}
+
+
+def test_zero_token_budget_rejected(setup):
+    cfg, params = setup
+    eng = Engine(params, cfg, max_len=32)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.serve([GenRequest(tokens=np.zeros(4, np.int32), max_new_tokens=0)])
+
+
+def test_sliding_window_bucket_never_evicts_real_kv():
+    """Bucket pads must not roll real prompt K/V out of the sliding-window
+    ring: past the window the engine prefills exact-length, and within it
+    padded vs exact prompts decode identically."""
+    cfg = get_config("mixtral_8x22b").reduced()  # window=32
+    w = cfg.sliding_window
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, max_len=96, slots=1, bucket=8)
+    assert eng._bucket_len(w + 3, None) == w + 3   # padding would evict -> exact
+    assert eng._bucket_len(w - 6, None) == w       # pad to 32: still in-ring
+    rng = np.random.default_rng(5)
+    long_prompt = rng.integers(0, cfg.vocab_size, (w + 3,)).astype(np.int32)
+    out = eng.serve([GenRequest(tokens=long_prompt, max_new_tokens=4)])[0]
+    exact = Engine(params, cfg, max_len=96, slots=1, bucket=1)
+    np.testing.assert_array_equal(
+        out, exact.serve([GenRequest(tokens=long_prompt, max_new_tokens=4)])[0]
+    )
