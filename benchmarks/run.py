@@ -139,10 +139,53 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     for name, t in serve_bench.run().items():
         rows_us[name] = t * 1e6
 
+    # --- accuracy tiers: the approximate backends' wall time AND measured
+    # relative residual.  The ``*_residual`` companion rows are what
+    # scripts/check.sh gates against the bounds the backends declare
+    # (``BF16_IR_RESIDUAL_FLOOR`` / ``RAND_LU_RESIDUAL_BOUND``) — an
+    # approximate tier that drifts past its advertised accuracy fails CI,
+    # not just a unit test at toy sizes.
+    from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
+
+    n = 1024
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    ir_tol = 1e-5
+    bf16_fn = functools.partial(kops.linear_solve, a, b, tolerance=ir_tol, impl="bf16_ir")
+    t = time_call(bf16_fn, iters=5)
+    x = bf16_fn()
+    resid = float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+    rows_us["lu_n1024_bf16_ir"] = t * 1e6
+    emit("lu_n1024_bf16_ir", t)
+    rows_us["lu_n1024_bf16_ir_residual"] = resid
+    print(f"lu_n1024_bf16_ir_residual,{resid:.3e},relative_residual", flush=True)
+
+    nr, k = 2048, 256
+    g1 = jax.random.normal(jax.random.PRNGKey(2), (nr, k))
+    g2 = jax.random.normal(jax.random.PRNGKey(3), (k, nr))
+    alr = (g1 @ g2) / k  # numerical rank k — the randomized tier's operand class
+    xtrue = jax.random.normal(jax.random.PRNGKey(4), (nr,))
+    blr = alr @ xtrue  # range-consistent RHS
+    rand_fn = functools.partial(
+        kops.linear_solve, alr, blr, rank=k, tolerance=RAND_LU_RESIDUAL_BOUND
+    )
+    t = time_call(rand_fn, iters=3)
+    x = rand_fn()
+    resid = float(jnp.linalg.norm(alr @ x - blr) / jnp.linalg.norm(blr))
+    rows_us[f"rand_lu_n{nr}_k{k}"] = t * 1e6
+    emit(f"rand_lu_n{nr}_k{k}", t)
+    rows_us[f"rand_lu_n{nr}_k{k}_residual"] = resid
+    print(f"rand_lu_n{nr}_k{k}_residual,{resid:.3e},relative_residual", flush=True)
+
     if out_path is None:
         out_path = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "BENCH_kernels.json")
     with open(out_path, "w") as f:
-        json.dump({k: round(v, 1) for k, v in rows_us.items()}, f, indent=2, sort_keys=True)
+        # timing rows round to 0.1 µs; residual companion rows are ~1e-6
+        # and must survive serialization un-flattened
+        json.dump(
+            {k: (round(v, 1) if abs(v) >= 1 else v) for k, v in rows_us.items()},
+            f, indent=2, sort_keys=True,
+        )
         f.write("\n")
     print(f"wrote {out_path}", file=sys.stderr)
     return rows_us

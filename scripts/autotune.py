@@ -105,6 +105,45 @@ def _operands(problem):
     return (lu, b)
 
 
+def _width_grid(level: str):
+    """Stacked-RHS coalescing-width sweeps: (dense n, widths to measure).
+    Consumed by ``AutotuneCache.best_width`` — the serve layer chunks wide
+    coalesced solve dispatches at the most µs-per-column-efficient width."""
+    if level == "full":
+        return [(512, (8, 32, 128, 512)), (2048, (8, 32, 128, 512))]
+    return [(512, (8, 32, 128))]
+
+
+def run_width_sweep(cache, level: str, iters: int) -> dict:
+    """Measure dense stacked-RHS substitution at each candidate width and
+    persist per-width µs into the cache (``record_widths``)."""
+    import jax
+
+    from benchmarks.common import time_call
+    from repro.core import make_diagonally_dominant
+    from repro.kernels import ops as kops
+    from repro.solvers import Problem
+
+    measured = {}
+    for n, widths in _width_grid(level):
+        a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+        lu = kops.lu(a)
+        width_us = {}
+        for w in widths:
+            b = jax.random.normal(jax.random.PRNGKey(1), (n, int(w)))
+            width_us[int(w)] = time_call(kops.lu_solve, lu, b, iters=iters) * 1e6
+        problem = Problem(op="solve", structure="dense", n=n, rhs=max(widths))
+        cache.record_widths(problem, width_us)
+        best = min(width_us, key=lambda w: width_us[w] / w)
+        measured[n] = width_us
+        print(
+            f"solve/dense n={n} width sweep: "
+            + "  ".join(f"w{w}={v:,.0f}us" for w, v in sorted(width_us.items()))
+            + f"  -> cap {best}"
+        )
+    return measured
+
+
 def run(level: str, out: str | None, iters: int) -> dict:
     import jax
 
@@ -135,6 +174,7 @@ def run(level: str, out: str | None, iters: int) -> dict:
             + "  ".join(f"{k}={v:,.0f}us" for k, v in sorted(times_us.items()))
             + f"  -> {winner}"
         )
+    run_width_sweep(cache, level, iters)
     cache.save(path)
     print(f"wrote {len(cache.entries)} entries to {path}", file=sys.stderr)
     return measured

@@ -72,6 +72,22 @@ assert picked == winner, (
     f"banded_solve auto dispatch ({picked}) disagrees with the measured "
     f"BENCH winner ({winner}): {measured}")
 print(f"banded_solve auto dispatch == measured winner: {winner}")
+
+# accuracy gate: every approximate tier's measured residual must stay
+# within the bound its backend declares to the selection funnel — an
+# accuracy drift past the advertised tier fails CI here, at bench scale,
+# not just in toy-size unit tests
+from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
+accuracy_gates = {
+    "lu_n1024_bf16_ir_residual": 1e-5,  # the tolerance the bench requested
+    "rand_lu_n2048_k256_residual": RAND_LU_RESIDUAL_BOUND,
+}
+for row, bound in accuracy_gates.items():
+    assert row in rows, f"smoke bench wrote no {row} row to BENCH_kernels.json"
+    assert rows[row] <= bound, (
+        f"approximate tier exceeded its declared bound: "
+        f"{row}={rows[row]:.3e} > {bound:.1e}")
+    print(f"accuracy gate: {row}={rows[row]:.3e} <= {bound:.1e}")
 EOF
     if [[ -n "$prev_bench" ]]; then
         # Gate calibration (measured on this container): sustained throttle

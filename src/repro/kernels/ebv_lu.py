@@ -248,9 +248,9 @@ def _fused_lu_kernel(a_any, o_any, panel_buf, tile1_buf, tile2_buf, sems, *, num
                 panel_buf[pl.ds(base + j, C2), pl.ds(j + C2, w)] = u
                 lpart = diag[j + C2 :, :]
                 blk = panel_buf[pl.ds(base + j + C2, w), pl.ds(j + C2, w)]
-                panel_buf[pl.ds(base + j + C2, w), pl.ds(j + C2, w)] = blk - jnp.dot(
-                    lpart, u, preferred_element_type=jnp.float32
-                )
+                panel_buf[pl.ds(base + j + C2, w), pl.ds(j + C2, w)] = (
+                    blk - jnp.dot(lpart, u, preferred_element_type=jnp.float32)
+                ).astype(blk.dtype)
 
             # (3) row blocks below: multipliers via right-solve against the
             # factored strip, then the rank-C2 GEMM retirement
@@ -260,9 +260,9 @@ def _fused_lu_kernel(a_any, o_any, panel_buf, tile1_buf, tile2_buf, sems, *, num
                 panel_buf[pl.ds(off, B), pl.ds(j, C2)] = strip
                 if w:
                     blkr = panel_buf[pl.ds(off, B), pl.ds(j + C2, w)]
-                    panel_buf[pl.ds(off, B), pl.ds(j + C2, w)] = blkr - jnp.dot(
-                        strip, u, preferred_element_type=jnp.float32
-                    )
+                    panel_buf[pl.ds(off, B), pl.ds(j + C2, w)] = (
+                        blkr - jnp.dot(strip, u, preferred_element_type=jnp.float32)
+                    ).astype(blkr.dtype)
                 return 0
 
             jax.lax.fori_loop(s + 1, S, rblk, 0)
@@ -307,7 +307,9 @@ def _fused_lu_kernel(a_any, o_any, panel_buf, tile1_buf, tile2_buf, sems, *, num
             w = B - j - C2
             if w:
                 lpart = panel_buf[pl.ds(base + j + C2, w), pl.ds(j, C2)]
-                tail = y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                tail = (
+                    y[j + C2 :, :] - jnp.dot(lpart, strip, preferred_element_type=jnp.float32)
+                ).astype(y.dtype)
                 y = jax.lax.dynamic_update_slice(y, tail, (j + C2, 0))
         tbuf[pl.ds(base, B), :] = y  # U12 tile
 
@@ -362,8 +364,8 @@ def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     n = a.shape[-1]
-    if a.dtype != jnp.float32:
-        raise TypeError(f"lu_fused supports float32 only, got {a.dtype}")
+    if a.dtype not in (jnp.float32, jnp.bfloat16):
+        raise TypeError(f"lu_fused supports float32/bfloat16 only, got {a.dtype}")
     B = fused_block_size(n, block)  # padding- and VMEM-aware; mirror uses it too
     S = -(-n // B)
     N = S * B
@@ -384,9 +386,9 @@ def lu_fused(a: jax.Array, *, block: int = 256, interpret: bool | None = None) -
         out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
         out_shape=jax.ShapeDtypeStruct((N, N), a.dtype),
         scratch_shapes=[
-            pltpu.VMEM((N, B), jnp.float32),
-            pltpu.VMEM((N, B), jnp.float32),
-            pltpu.VMEM((N, B), jnp.float32),
+            pltpu.VMEM((N, B), a.dtype),
+            pltpu.VMEM((N, B), a.dtype),
+            pltpu.VMEM((N, B), a.dtype),
             pltpu.SemaphoreType.DMA((3,)),
         ],
         input_output_aliases={0: 0},

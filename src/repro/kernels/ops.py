@@ -50,6 +50,8 @@ import importlib
 import jax
 import jax.numpy as jnp
 
+from repro.core.randomized import RankKFactors
+
 __all__ = [
     "lu",
     "lu_solve",
@@ -130,21 +132,25 @@ def _with_batch_rule(unbatched_fn, batched_fn):
 # ---------------------------------------------------------------------------
 # dense LU
 # ---------------------------------------------------------------------------
-def _lu_2d(a: jax.Array, *, impl, block, col_tile, interpret) -> jax.Array:
+def _lu_2d(a: jax.Array, *, impl, block, col_tile, interpret, tolerance=0.0,
+           rank=None, oversample=8, rng_key=None) -> jax.Array:
     if impl in (None, "pallas_fused") and a.dtype != jnp.float32:
         # The fused kernel is fp32-only.  Fall back to its bitwise mirror
         # (as fast as fused at n=1024 per BENCH_kernels.json) rather than
         # the ~9x-slower multi-launch blocked driver.
         _warn_fused_dtype_fallback(a.dtype)
         impl = "xla"
-    problem = _sol().Problem.from_arrays("factor", a)
+    if rank is not None and impl is None:
+        impl = "rand_lu"  # an explicit rank is a request for the rank-k tier
+    problem = _sol().Problem.from_arrays("factor", a, tolerance=tolerance)
     return _sol().dispatch(
-        problem, a, impl=impl, block=block, col_tile=col_tile, interpret=interpret
+        problem, a, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
+        rank=rank, oversample=oversample, rng_key=rng_key,
     )
 
 
-def _lu_batched(a: jax.Array, *, impl, block, interpret) -> jax.Array:
-    problem = _sol().Problem.from_arrays("factor", a)
+def _lu_batched(a: jax.Array, *, impl, block, interpret, tolerance=0.0) -> jax.Array:
+    problem = _sol().Problem.from_arrays("factor", a, tolerance=tolerance)
     return _sol().dispatch(
         problem, a, impl=_batched_impl("factor", "dense", impl),
         block=block, interpret=interpret,
@@ -161,38 +167,58 @@ def lu(
     mesh=None,
     mesh_axis: str = "model",
     placement: str = "ebv_folded",
+    tolerance: float = 0.0,
+    rank: int | None = None,
+    oversample: int = 8,
+    rng_key=None,
 ) -> jax.Array:
     """Packed EbV LU factorization (no pivoting — paper contract).
 
     2-D input → dense backends; a leading batch axis (or ``jax.vmap``) →
-    the batched grid kernels; ``mesh=`` → the multi-chip shard_map LU."""
+    the batched grid kernels; ``mesh=`` → the multi-chip shard_map LU.
+
+    ``tolerance`` (largest acceptable relative residual of downstream
+    solves) keys the selection funnel and the autotune cache; 0.0 keeps the
+    exact tier bitwise-identical to a tolerance-less call.  ``rank=`` routes
+    to the randomized rank-k tier (``impl="rand_lu"``) and returns
+    :class:`repro.core.randomized.RankKFactors` instead of a packed square
+    factor (``lu_solve`` recognises them)."""
     if mesh is not None and mesh.shape[mesh_axis] > 1:
         if impl not in (None, "distributed"):
             raise ValueError(
                 f"impl={impl!r} is a single-device backend and cannot honour "
                 "mesh=; only 'distributed' spans devices (drop mesh= or impl=)"
             )
-        problem = _sol().Problem.from_arrays("factor", a, devices=mesh.shape[mesh_axis])
+        problem = _sol().Problem.from_arrays(
+            "factor", a, devices=mesh.shape[mesh_axis], tolerance=tolerance
+        )
         return _sol().dispatch(
             problem, a, impl=impl, mesh=mesh, axis=mesh_axis,
             block=block, placement=placement, interpret=interpret,
         )
     if a.ndim >= 3:
+        if rank is not None:
+            raise ValueError("rank= (the randomized tier) supports 2-D operands only")
         lead, tail = a.shape[:-2], a.shape[-2:]
-        out = _lu_batched(a.reshape((-1,) + tail), impl=impl, block=block, interpret=interpret)
+        out = _lu_batched(
+            a.reshape((-1,) + tail), impl=impl, block=block, interpret=interpret,
+            tolerance=tolerance,
+        )
         return out.reshape(lead + tail)
 
     return _with_batch_rule(
-        lambda x: _lu_2d(x, impl=impl, block=block, col_tile=col_tile, interpret=interpret),
-        lambda xs: _lu_batched(xs, impl=impl, block=block, interpret=interpret),
+        lambda x: _lu_2d(x, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
+                         tolerance=tolerance, rank=rank, oversample=oversample, rng_key=rng_key),
+        lambda xs: _lu_batched(xs, impl=impl, block=block, interpret=interpret,
+                               tolerance=tolerance),
     )(a)
 
 
 # ---------------------------------------------------------------------------
 # substitution (solve) on packed factors
 # ---------------------------------------------------------------------------
-def _lu_solve_2d(lu_packed, b, *, impl, block, rhs_tile, interpret):
-    problem = _sol().Problem.from_arrays("solve", lu_packed, b)
+def _lu_solve_2d(lu_packed, b, *, impl, block, rhs_tile, interpret, tolerance=0.0):
+    problem = _sol().Problem.from_arrays("solve", lu_packed, b, tolerance=tolerance)
     allow = None
     if impl == "pallas":  # old meaning: auto restricted to the Pallas drivers
         impl, allow = None, lambda be: be.name.startswith("pallas")
@@ -202,10 +228,10 @@ def _lu_solve_2d(lu_packed, b, *, impl, block, rhs_tile, interpret):
     )
 
 
-def _lu_solve_batched(lu_packed, b, *, impl, block, interpret):
+def _lu_solve_batched(lu_packed, b, *, impl, block, interpret, tolerance=0.0):
     squeeze = b.ndim == 2  # (B, n) vector RHS
     bm = b[..., None] if squeeze else b
-    problem = _sol().Problem.from_arrays("solve", lu_packed, bm)
+    problem = _sol().Problem.from_arrays("solve", lu_packed, bm, tolerance=tolerance)
     x = _sol().dispatch(
         problem, lu_packed, bm, impl=_batched_impl("solve", "dense", impl),
         block=block, interpret=interpret,
@@ -214,28 +240,48 @@ def _lu_solve_batched(lu_packed, b, *, impl, block, interpret):
 
 
 def lu_solve(
-    lu_packed: jax.Array,
+    lu_packed,
     b: jax.Array,
     *,
     impl: str | None = None,
     block: int = 256,
     rhs_tile: int = 256,
     interpret: bool | None = None,
+    tolerance: float = 0.0,
 ) -> jax.Array:
+    if isinstance(lu_packed, RankKFactors):
+        # rank-k factors from lu(rank=...) — only the randomized backend
+        # can consume them, so this is a forced dispatch by construction
+        problem = _sol().Problem(
+            op="solve", structure="dense", n=int(lu_packed.l.shape[0]),
+            dtype=jnp.dtype(lu_packed.l.dtype).name,
+            rhs=1 if b.ndim == 1 else int(b.shape[-1]),
+            tolerance=float(tolerance),
+        )
+        return _sol().dispatch(problem, lu_packed, b, impl="rand_lu")
     if lu_packed.ndim >= 3:
         if lu_packed.ndim > 3:  # fold extra leading batch dims, like lu()
             lead, tail = lu_packed.shape[:-2], lu_packed.shape[-2:]
             bf = b.reshape((-1,) + b.shape[len(lead):])
             x = _lu_solve_batched(
                 lu_packed.reshape((-1,) + tail), bf,
-                impl=impl, block=block, interpret=interpret,
+                impl=impl, block=block, interpret=interpret, tolerance=tolerance,
             )
             return x.reshape(lead + x.shape[1:])
-        return _lu_solve_batched(lu_packed, b, impl=impl, block=block, interpret=interpret)
+        return _lu_solve_batched(
+            lu_packed, b, impl=impl, block=block, interpret=interpret, tolerance=tolerance
+        )
     return _with_batch_rule(
-        lambda l, r: _lu_solve_2d(l, r, impl=impl, block=block, rhs_tile=rhs_tile, interpret=interpret),
-        lambda ls, rs: _lu_solve_batched(ls, rs, impl=impl, block=block, interpret=interpret),
+        lambda l, r: _lu_solve_2d(l, r, impl=impl, block=block, rhs_tile=rhs_tile,
+                                  interpret=interpret, tolerance=tolerance),
+        lambda ls, rs: _lu_solve_batched(ls, rs, impl=impl, block=block,
+                                         interpret=interpret, tolerance=tolerance),
     )(lu_packed, b)
+
+
+# linear_solve slot backends that fuse factor+solve (the approximate tiers
+# need the full operand — bf16_ir refines against it, rand_lu sketches it)
+_FUSED_LINEAR_IMPLS = ("bf16_ir", "bf16_ir_xla", "rand_lu")
 
 
 def linear_solve(
@@ -246,6 +292,10 @@ def linear_solve(
     mesh=None,
     mesh_axis: str = "model",
     placement: str = "ebv_folded",
+    tolerance: float = 0.0,
+    rank: int | None = None,
+    oversample: int = 8,
+    rng_key=None,
     **kw,
 ) -> jax.Array:
     """Factor + solve.  ``impl`` routes BOTH phases: the factor phase gets it
@@ -254,7 +304,16 @@ def linear_solve(
     the default Pallas path).  Pass ``solve_impl`` to mix phases
     deliberately (any :func:`lu_solve` impl name).  With ``mesh=`` the whole
     factor+substitution pipeline runs distributed
-    (:func:`repro.core.distributed.distributed_lu_solve`)."""
+    (:func:`repro.core.distributed.distributed_lu_solve`).
+
+    ``tolerance`` (largest acceptable relative residual) opens the
+    approximate tiers: the call first consults the fused ``linear_solve``
+    slot, where the tolerance gate admits backends whose guaranteed
+    residual bound it covers (``bf16_ir`` — bf16 factor + f32 iterative
+    refinement — at ≥ 1e-6); with no admitted backend it composes the exact
+    factor+solve as before.  ``rank=`` (or ``impl="rand_lu"``) forces the
+    randomized rank-k tier.  ``tolerance=0.0`` (default) is
+    bitwise-identical to the pre-tolerance call."""
     if mesh is not None and mesh.shape[mesh_axis] > 1:
         if kw.get("impl") not in (None, "distributed"):
             raise ValueError(
@@ -262,15 +321,32 @@ def linear_solve(
                 "honour mesh=; only 'distributed' spans devices"
             )
         problem = _sol().Problem.from_arrays(
-            "linear_solve", a, b, devices=mesh.shape[mesh_axis]
+            "linear_solve", a, b, devices=mesh.shape[mesh_axis], tolerance=tolerance
         )
         return _sol().dispatch(
             problem, a, b, impl=kw.get("impl"), mesh=mesh, axis=mesh_axis,
             block=kw.get("block", 64), placement=placement,
             interpret=kw.get("interpret"),
         )
+    impl = kw.get("impl")
+    if rank is not None and impl is None:
+        impl = "rand_lu"
+    if impl in _FUSED_LINEAR_IMPLS or (impl is None and tolerance > 0):
+        bm = b[..., None] if b.ndim == a.ndim - 1 else b
+        problem = _sol().Problem.from_arrays("linear_solve", a, bm, tolerance=tolerance)
+        if impl is not None or _sol().candidates(problem):
+            squeeze = bm is not b
+            x = _sol().dispatch(
+                problem, a, bm, impl=impl,
+                block=kw.get("block", 256), interpret=kw.get("interpret"),
+                rank=rank, oversample=oversample, rng_key=rng_key,
+            )
+            return x[..., 0] if squeeze else x
+        # tolerance too tight for every approximate tier: compose the exact
+        # factor+solve below (tolerance still keys their cache rows)
     lu_kw = {k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}
     solve_kw = {k: v for k, v in kw.items() if k in ("block", "rhs_tile", "interpret")}
+    lu_kw["tolerance"] = solve_kw["tolerance"] = tolerance
     if solve_impl is None and kw.get("impl") is not None:
         solve_impl = "xla" if kw["impl"] == "xla" else "pallas"
     if solve_impl is not None:
@@ -281,8 +357,8 @@ def linear_solve(
 # ---------------------------------------------------------------------------
 # banded (row-aligned band, see repro.core.banded)
 # ---------------------------------------------------------------------------
-def _banded_lu_2d(arow, *, bw, impl, block, interpret):
-    problem = _sol().Problem.from_arrays("factor", arow, bw=bw)
+def _banded_lu_2d(arow, *, bw, impl, block, interpret, tolerance=0.0):
+    problem = _sol().Problem.from_arrays("factor", arow, bw=bw, tolerance=tolerance)
     allow = None
     if impl == "pallas":  # old meaning: Pallas-only auto (6 MB VMEM rule)
         impl, allow = None, lambda be: be.name in ("pallas_blocked", "pallas_tiled")
@@ -291,8 +367,8 @@ def _banded_lu_2d(arow, *, bw, impl, block, interpret):
     )
 
 
-def _banded_lu_batched(arow, *, bw, impl, block, interpret):
-    problem = _sol().Problem.from_arrays("factor", arow, bw=bw)
+def _banded_lu_batched(arow, *, bw, impl, block, interpret, tolerance=0.0):
+    problem = _sol().Problem.from_arrays("factor", arow, bw=bw, tolerance=tolerance)
     return _sol().dispatch(
         problem, arow, impl=_batched_impl("factor", "banded", impl),
         bw=bw, block=block, interpret=interpret,
@@ -306,30 +382,36 @@ def banded_lu(
     impl: str | None = None,
     block: int | None = None,
     interpret: bool | None = None,
+    tolerance: float = 0.0,
 ) -> jax.Array:
-    """Packed band LU on the row-aligned band (no pivoting)."""
+    """Packed band LU on the row-aligned band (no pivoting).  ``tolerance``
+    keys selection/cache like the dense ops (no approximate banded tier
+    exists yet, so it only partitions cache rows)."""
     if arow.ndim >= 3:
         lead, tail = arow.shape[:-2], arow.shape[-2:]
         out = _banded_lu_batched(
-            arow.reshape((-1,) + tail), bw=bw, impl=impl, block=block, interpret=interpret
+            arow.reshape((-1,) + tail), bw=bw, impl=impl, block=block,
+            interpret=interpret, tolerance=tolerance,
         )
         return out.reshape(lead + out.shape[1:])
     return _with_batch_rule(
-        lambda x: _banded_lu_2d(x, bw=bw, impl=impl, block=block, interpret=interpret),
-        lambda xs: _banded_lu_batched(xs, bw=bw, impl=impl, block=block, interpret=interpret),
+        lambda x: _banded_lu_2d(x, bw=bw, impl=impl, block=block, interpret=interpret,
+                                tolerance=tolerance),
+        lambda xs: _banded_lu_batched(xs, bw=bw, impl=impl, block=block,
+                                      interpret=interpret, tolerance=tolerance),
     )(arow)
 
 
-def _banded_solve_2d(lu_band, b, *, bw, impl, block, rhs_tile, interpret):
-    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw)
+def _banded_solve_2d(lu_band, b, *, bw, impl, block, rhs_tile, interpret, tolerance=0.0):
+    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw, tolerance=tolerance)
     return _sol().dispatch(
         problem, lu_band, b, impl=impl,
         bw=bw, block=block, rhs_tile=rhs_tile, interpret=interpret,
     )
 
 
-def _banded_solve_batched(lu_band, b, *, bw, impl, block, interpret):
-    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw)
+def _banded_solve_batched(lu_band, b, *, bw, impl, block, interpret, tolerance=0.0):
+    problem = _sol().Problem.from_arrays("solve", lu_band, b, bw=bw, tolerance=tolerance)
     return _sol().dispatch(
         problem, lu_band, b, impl=_batched_impl("solve", "banded", impl),
         bw=bw, block=block, interpret=interpret,
@@ -345,6 +427,7 @@ def banded_solve(
     block: int | None = None,
     rhs_tile: int = 256,
     interpret: bool | None = None,
+    tolerance: float = 0.0,
 ) -> jax.Array:
     """Forward+backward substitution on packed band factors.
 
@@ -359,16 +442,21 @@ def banded_solve(
             bf = b.reshape((-1,) + b.shape[len(lead):])
             x = _banded_solve_batched(
                 lu_band.reshape((-1,) + tail), bf,
-                bw=bw, impl=impl, block=block, interpret=interpret,
+                bw=bw, impl=impl, block=block, interpret=interpret, tolerance=tolerance,
             )
             return x.reshape(lead + x.shape[1:])
-        return _banded_solve_batched(lu_band, b, bw=bw, impl=impl, block=block, interpret=interpret)
+        return _banded_solve_batched(
+            lu_band, b, bw=bw, impl=impl, block=block, interpret=interpret,
+            tolerance=tolerance,
+        )
     return _with_batch_rule(
         lambda l, r: _banded_solve_2d(
-            l, r, bw=bw, impl=impl, block=block, rhs_tile=rhs_tile, interpret=interpret
+            l, r, bw=bw, impl=impl, block=block, rhs_tile=rhs_tile,
+            interpret=interpret, tolerance=tolerance,
         ),
         lambda ls, rs: _banded_solve_batched(
-            ls, rs, bw=bw, impl=impl, block=block, interpret=interpret
+            ls, rs, bw=bw, impl=impl, block=block, interpret=interpret,
+            tolerance=tolerance,
         ),
     )(lu_band, b)
 
@@ -383,6 +471,7 @@ def banded_linear_solve(
     block: int | None = None,
     rhs_tile: int = 256,
     interpret: bool | None = None,
+    tolerance: float = 0.0,
 ) -> jax.Array:
     """Banded factor + solve with ``impl`` routed to BOTH phases (the same
     contract :func:`linear_solve` honours): ``"xla*"`` factor impls solve
@@ -390,7 +479,9 @@ def banded_linear_solve(
     blocked solve kernel.  ``solve_impl`` overrides the solve phase."""
     if solve_impl is None and impl is not None:
         solve_impl = impl if impl in ("xla", "xla_scalar") else "pallas"
-    lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret)
+    lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret,
+                    tolerance=tolerance)
     return banded_solve(
-        lub, b, bw=bw, impl=solve_impl, block=block, rhs_tile=rhs_tile, interpret=interpret
+        lub, b, bw=bw, impl=solve_impl, block=block, rhs_tile=rhs_tile,
+        interpret=interpret, tolerance=tolerance,
     )

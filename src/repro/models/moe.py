@@ -61,22 +61,46 @@ def _moe_grouped(p, xt, cfg: ModelConfig, *, group_tokens: int = 16384):
         xt = jnp.pad(xt, ((0, pad), (0, 0)))
     xg = xt.reshape(g, group_tokens, d)
 
-    def body(_, xb):
-        out, aux = _moe_local(p, xb, cfg)
-        return None, (out, aux)
-
     from repro.utils import flags
 
-    _, (out, aux) = jax.lax.scan(body, None, xg, unroll=flags.scan_unroll())
+    if pad:
+        # the tail group is underfull: carry each group's VALID token count
+        # so phantom pad rows neither consume capacity slots nor skew the
+        # aux loss, and the tail's effective capacity scales to its real
+        # population — underfull tails route like full groups.
+        counts = jnp.full((g,), group_tokens, jnp.int32).at[-1].set(group_tokens - pad)
+
+        def body(_, args):
+            xb, rb = args
+            out, aux = _moe_local(p, xb, cfg, valid_count=rb)
+            return None, (out, aux)
+
+        _, (out, aux) = jax.lax.scan(body, None, (xg, counts), unroll=flags.scan_unroll())
+    else:
+
+        def body(_, xb):
+            out, aux = _moe_local(p, xb, cfg)
+            return None, (out, aux)
+
+        _, (out, aux) = jax.lax.scan(body, None, xg, unroll=flags.scan_unroll())
     out = out.reshape(g * group_tokens, d)[:t]
     return out, aux.mean()
 
 
-def _moe_local(p, xt, cfg: ModelConfig):
+def _moe_local(p, xt, cfg: ModelConfig, valid_count=None):
     """Local-token MoE: xt (T, D) → (out (T, D) [partial over the ff shard],
-    aux).  Dispatch/combine never leave the chip."""
+    aux).  Dispatch/combine never leave the chip.
+
+    ``valid_count`` (traced int32 scalar, or None = all ``T`` rows real)
+    marks the leading real-token population of a zero-padded block: pad
+    rows are masked out of routing, capacity ranking, and the aux loss,
+    and the capacity bound scales to the real population —
+    ``⌊cf·R·k/E⌋`` — so an underfull tail group drops tokens at the same
+    per-token rate as a full one.  Buffer shapes stay static (sized by the
+    full-group capacity) so the scan over groups keeps one trace."""
     t, d = xt.shape
     e, k = cfg.num_experts, cfg.experts_per_token
+    row_valid = None if valid_count is None else jnp.arange(t) < valid_count
 
     # bf16 inputs, fp32 accumulation — never materializes an f32 token copy
     gate_logits = jnp.einsum(
@@ -88,10 +112,23 @@ def _moe_local(p, xt, cfg: ModelConfig):
     top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
 
     # aux load-balance loss (Switch-style): E * Σ_e fraction_e · mean-prob_e
-    frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
-    aux = e * jnp.sum(frac * probs.mean(0))
-
     cap = max(int(cfg.moe_capacity_factor * t * k / e), 1)
+    if row_valid is None:
+        frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(1.0) / (t * k)
+        aux = e * jnp.sum(frac * probs.mean(0))
+    else:
+        r = jnp.maximum(valid_count, 1)
+        hits = jnp.repeat(row_valid.astype(jnp.float32), k)
+        frac = jnp.zeros((e,), jnp.float32).at[top_e.reshape(-1)].add(hits) / (r * k)
+        mean_p = jnp.sum(probs * row_valid[:, None], axis=0) / r
+        aux = e * jnp.sum(frac * mean_p)
+        cap_eff = jnp.where(
+            valid_count == t,
+            cap,
+            jnp.maximum(
+                (cfg.moe_capacity_factor * valid_count * k // e).astype(jnp.int32), 1
+            ),
+        )
 
     buf = jnp.zeros((e * cap, d), xt.dtype)
     slots = []
@@ -99,10 +136,15 @@ def _moe_local(p, xt, cfg: ModelConfig):
     for j in range(k):
         ej = top_e[:, j]  # (T,)
         onehot = jax.nn.one_hot(ej, e, dtype=jnp.int32)  # (T, E)
+        if row_valid is not None:
+            onehot = onehot * row_valid[:, None].astype(jnp.int32)
         rank = jnp.cumsum(onehot, axis=0) - onehot + prev_counts[None, :]
         rank_j = jnp.take_along_axis(rank, ej[:, None], axis=1)[:, 0]  # (T,)
         prev_counts = prev_counts + onehot.sum(0)
-        valid = rank_j < cap
+        if row_valid is None:
+            valid = rank_j < cap
+        else:
+            valid = (rank_j < cap_eff) & row_valid
         slot = jnp.where(valid, ej * cap + rank_j, e * cap - 1)  # overflow dropped
         slots.append((slot, valid))
         buf = buf.at[slot].add(jnp.where(valid[:, None], xt, 0.0))

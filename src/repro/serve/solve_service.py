@@ -20,9 +20,26 @@ capability filter — e.g. the vector-only scalar banded solve is pruned when
 ``rhs > 1``) decides *how* each coalesced dispatch runs.  Dispatch counts in
 ``stats`` come from the registry's dispatch hook, not from self-reporting.
 
+**Accuracy tiers.**  Requests carry a ``tolerance`` (largest acceptable
+relative residual; 0.0 = exact).  The factorization cache holds factors
+*per accuracy tier* under each fingerprint — tier 0.0 for packed exact
+factors, tier ``RAND_LU_RESIDUAL_BOUND`` for rank-k factors produced by a
+``rank=`` request.  A request is served by any cached tier **at or below**
+its tolerance (a tighter factor always satisfies a looser request); the
+reverse — an approximate factor serving a tighter request — is structurally
+impossible, because eligibility is ``tier <= tolerance``.  The tolerance
+also threads into every factor/solve :class:`~repro.solvers.Problem`, so
+the registry's tolerance gate and the autotune cache key see it.
+
+**Coalescing-width cap.**  Stacked-RHS solves normally coalesce every
+pending column into one dispatch.  When ``scripts/autotune.py`` has swept
+dispatch widths for a transferable shape (``AutotuneCache.best_width``),
+the stack is chunked at the measured most-µs-per-column-efficient width
+instead — unmeasured shapes keep full coalescing.
+
 Admission/ordering rides the shared :class:`repro.serve.scheduler.Scheduler`
-(buckets = ``(structure, n, bw, dtype)``; deadline/FIFO order decides which
-matrix group flushes first).
+(buckets = ``(structure, n, bw, dtype, tolerance)``; deadline/FIFO order
+decides which matrix group flushes first).
 """
 from __future__ import annotations
 
@@ -30,12 +47,16 @@ import dataclasses
 import hashlib
 from collections import OrderedDict
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import solvers
-from repro.kernels import ops as kops
+from repro.core import refine as _refine
+from repro.core.randomized import RankKFactors
 from repro.core.solve import split_rhs, stack_rhs
+from repro.kernels import ops as kops
+from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
 from .scheduler import Scheduler
 
 __all__ = ["SolveRequest", "SolveServiceStats", "SolveService", "fingerprint"]
@@ -59,6 +80,8 @@ class SolveRequest:
     b: object  # RHS (n,) or (n, m)
     bw: int
     deadline: float | None = None
+    tolerance: float = 0.0  # largest acceptable relative residual (0 = exact)
+    rank: int | None = None  # request the randomized rank-k factor tier
 
 
 @dataclasses.dataclass
@@ -71,6 +94,10 @@ class SolveServiceStats:
     solve_dispatches: int = 0
     coalesced_requests: int = 0  # requests that shared a solve dispatch
     solved_columns: int = 0
+    approx_solves: int = 0  # dispatches served by a residual-bound (approximate) tier
+    width_capped_dispatches: int = 0  # extra dispatches forced by the coalescing cap
+    last_refine_iterations: int | None = None  # refinement sweeps of the last
+                                               # approximate solve (None = none ran)
 
     @property
     def hit_rate(self) -> float:
@@ -90,29 +117,58 @@ class SolveService:
 
     def __init__(self, *, cache_entries: int = 16):
         self.cache_entries = cache_entries
-        self._lru: OrderedDict[str, object] = OrderedDict()  # fp -> packed factors
+        # fp -> {accuracy tier -> factors}; tier 0.0 = exact packed factors,
+        # tier t > 0 = approximate factors guaranteeing relative residual t.
+        # LRU order (and the entry budget) is per fingerprint.
+        self._lru: OrderedDict[str, dict[float, object]] = OrderedDict()
         self._sched = Scheduler()
         self._tickets = 0
         self._done: dict[int, object] = {}  # flushed, not yet redeemed
         self.stats = SolveServiceStats()
 
     # -- admission ----------------------------------------------------------
-    def submit(self, a, b, *, bw: int = 0, deadline: float | None = None) -> int:
+    def submit(
+        self,
+        a,
+        b,
+        *,
+        bw: int = 0,
+        deadline: float | None = None,
+        tolerance: float = 0.0,
+        rank: int | None = None,
+    ) -> int:
         """Enqueue ``a x = b`` (``bw > 0`` = row-aligned band operand);
-        returns a ticket redeemable at the next :meth:`flush`."""
+        returns a ticket redeemable at the next :meth:`flush`.
+
+        ``tolerance`` is the largest acceptable relative residual — it keys
+        the scheduler bucket and selects which cached factor tiers may serve
+        the request (any tier ≤ tolerance).  ``rank=`` asks for the
+        randomized rank-k tier (dense only; requires ``tolerance`` at least
+        the tier's guaranteed bound)."""
+        if tolerance < 0:
+            raise ValueError(f"tolerance must be >= 0, got {tolerance}")
+        if rank is not None:
+            if bw:
+                raise ValueError("rank= (randomized tier) is dense-only")
+            if tolerance < RAND_LU_RESIDUAL_BOUND:
+                raise ValueError(
+                    f"rank= produces factors guaranteed to {RAND_LU_RESIDUAL_BOUND:g} "
+                    f"relative residual; request tolerance {tolerance:g} is tighter"
+                )
         a = jnp.asarray(a)
         b = jnp.asarray(b)
         ticket = self._tickets
         self._tickets += 1
         req = SolveRequest(
-            ticket=ticket, fp=fingerprint(a, bw=bw), a=a, b=b, bw=bw, deadline=deadline
+            ticket=ticket, fp=fingerprint(a, bw=bw), a=a, b=b, bw=bw,
+            deadline=deadline, tolerance=float(tolerance), rank=rank,
         )
         n = int(a.shape[-2]) if bw else int(a.shape[-1])
         structure = "banded" if bw else "dense"
         cols = 1 if b.ndim == 1 else int(b.shape[-1])
         self._sched.submit(
-            req, bucket=(structure, n, bw, str(a.dtype)), cost=float(cols),
-            deadline=deadline, real=cols,
+            req, bucket=(structure, n, bw, str(a.dtype), float(tolerance)),
+            cost=float(cols), deadline=deadline, real=cols,
         )
         self.stats.requests += 1
         return ticket
@@ -121,17 +177,32 @@ class SolveService:
         return len(self._sched)
 
     # -- factorization cache ------------------------------------------------
-    def _factors_for(self, req: SolveRequest):
-        if req.fp in self._lru:
-            self.stats.cache_hits += 1
-            self._lru.move_to_end(req.fp)
-            return self._lru[req.fp]
+    @staticmethod
+    def _factor_tier(factors) -> float:
+        """The accuracy tier a factor object belongs to: the residual its
+        producing backend guarantees (rank-k factors), 0.0 for exact."""
+        return RAND_LU_RESIDUAL_BOUND if isinstance(factors, RankKFactors) else 0.0
+
+    def _factors_for(self, req: SolveRequest, tolerance: float):
+        tiers = self._lru.get(req.fp)
+        if tiers is not None:
+            # a cached tier serves the request iff it is at least as tight
+            # as the request's tolerance — never the reverse.  Among the
+            # eligible tiers the tightest wins (best answer, same price).
+            eligible = [t for t in tiers if t <= tolerance]
+            if eligible:
+                self.stats.cache_hits += 1
+                self._lru.move_to_end(req.fp)
+                return tiers[min(eligible)]
         self.stats.cache_misses += 1
         if req.bw:
-            factors = kops.banded_lu(req.a, bw=req.bw)
+            factors = kops.banded_lu(req.a, bw=req.bw, tolerance=tolerance)
+        elif req.rank is not None:
+            factors = kops.lu(req.a, rank=req.rank, tolerance=tolerance)
         else:
-            factors = kops.lu(req.a)
-        self._lru[req.fp] = factors
+            factors = kops.lu(req.a, tolerance=tolerance)
+        self._lru.setdefault(req.fp, {})[self._factor_tier(factors)] = factors
+        self._lru.move_to_end(req.fp)
         while len(self._lru) > self.cache_entries:
             self._lru.popitem(last=False)
             self.stats.cache_evictions += 1
@@ -146,11 +217,17 @@ class SolveService:
         counting = solvers.add_dispatch_hook(self._count_dispatch)
         try:
             results: dict[int, object] = {}
-            groups: OrderedDict[str, list[SolveRequest]] = OrderedDict()
+            groups: OrderedDict[tuple, list[SolveRequest]] = OrderedDict()
             for entry in self._sched.drain():
-                groups.setdefault(entry.payload.fp, []).append(entry.payload)
-            for fp, reqs in groups.items():
-                factors = self._factors_for(reqs[0])
+                p = entry.payload
+                # rank-tier requests coalesce separately from exact requests
+                # against the same matrix — they want different factors.
+                groups.setdefault((p.fp, p.rank), []).append(p)
+            for (fp, rank), reqs in groups.items():
+                # tightest member tolerance governs the whole coalesced
+                # dispatch: every member accepts its residual.
+                group_tol = min(r.tolerance for r in reqs)
+                factors = self._factors_for(reqs[0], group_tol)
                 # hit/miss accounting is per REQUEST: coalesced group members
                 # past the leader are served without a factorization too
                 self.stats.cache_hits += len(reqs) - 1
@@ -158,10 +235,7 @@ class SolveService:
                 self.stats.solved_columns += int(stacked.shape[-1])
                 if len(reqs) > 1:
                     self.stats.coalesced_requests += len(reqs)
-                if reqs[0].bw:
-                    x = kops.banded_solve(factors, stacked, bw=reqs[0].bw)
-                else:
-                    x = kops.lu_solve(factors, stacked)
+                x = self._dispatch_solve(reqs[0], factors, stacked, group_tol)
                 for r, xr in zip(reqs, split_rhs(x, widths, squeezes)):
                     results[r.ticket] = xr
             self._done.update(results)
@@ -169,16 +243,51 @@ class SolveService:
         finally:
             solvers.remove_dispatch_hook(counting)
 
+    def _dispatch_solve(self, req: SolveRequest, factors, stacked, tolerance: float):
+        """One coalesced substitution — chunked at the autotuned coalescing
+        width when the registry has measured one for this shape."""
+        def run(cols):
+            if req.bw:
+                return kops.banded_solve(factors, cols, bw=req.bw, tolerance=tolerance)
+            return kops.lu_solve(factors, cols, tolerance=tolerance)
+
+        width = int(stacked.shape[-1])
+        cap = None
+        if not isinstance(factors, RankKFactors):
+            # width measurements only exist for packed-factor substitution;
+            # rank-k solves are GEMM-shaped and always coalesce fully.
+            problem = solvers.Problem.from_arrays(
+                "solve", factors, stacked, bw=req.bw, tolerance=tolerance
+            )
+            cap = solvers.get_cache().best_width(problem)
+        if cap and width > cap:
+            pieces = [
+                run(stacked[..., i : i + cap]) for i in range(0, width, cap)
+            ]
+            self.stats.width_capped_dispatches += len(pieces) - 1
+            x = jnp.concatenate(pieces, axis=-1)
+        else:
+            x = run(stacked)
+        if isinstance(factors, RankKFactors) and tolerance > 0.0:
+            # polish the approximate-tier answer to the group tolerance
+            # against the full operand; the sweep count lands in stats.
+            x, info = _refine.iterative_refinement(
+                req.a, stacked, x, run, tolerance=tolerance
+            )
+            jax.block_until_ready(x)
+            self.stats.last_refine_iterations = int(info.iterations)
+        return x
+
     def result(self, ticket: int):
         """Redeem (pop) a flushed ticket; raises KeyError if the ticket was
         never flushed or was already redeemed."""
         return self._done.pop(ticket)
 
-    def solve(self, a, b, *, bw: int = 0):
+    def solve(self, a, b, *, bw: int = 0, tolerance: float = 0.0, rank: int | None = None):
         """submit + flush for one request (still hits/extends the cache).
         Other pending requests flushed alongside stay redeemable via
         :meth:`result`."""
-        ticket = self.submit(a, b, bw=bw)
+        ticket = self.submit(a, b, bw=bw, tolerance=tolerance, rank=rank)
         self.flush()
         return self.result(ticket)
 
@@ -187,3 +296,5 @@ class SolveService:
             self.stats.factor_dispatches += 1
         elif problem.op in ("solve", "linear_solve"):
             self.stats.solve_dispatches += 1
+            if getattr(backend, "residual_bound", None) is not None:
+                self.stats.approx_solves += 1

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 
 from repro.core import banded as _core_banded
 from repro.core import blocked as _core_blocked
+from repro.core import randomized as _core_rand
+from repro.core import refine as _core_refine
 from repro.core import solve as _core_solve
 from repro.kernels import banded as _kbanded
 from repro.kernels import batched_lu as _kbatched
@@ -31,7 +33,15 @@ from repro.kernels import trsm as _trsm
 from .problem import Problem
 from .registry import Backend, register
 
-__all__ = ["SOLVE_VMEM_MAX_N", "BANDED_VMEM_MAX_BYTES", "BATCHED_VMEM_MAX_N", "banded_static_impl"]
+__all__ = [
+    "SOLVE_VMEM_MAX_N",
+    "BANDED_VMEM_MAX_BYTES",
+    "BATCHED_VMEM_MAX_N",
+    "BF16_IR_RESIDUAL_FLOOR",
+    "RAND_LU_RESIDUAL_BOUND",
+    "IR_MAX_ITERS",
+    "banded_static_impl",
+]
 
 # Above this order the packed (n, n) LU no longer comfortably shares VMEM
 # with an RHS tile, so the static solve choice switches to the tiled driver.
@@ -45,6 +55,25 @@ BANDED_VMEM_MAX_BYTES = 6 * 2**20
 # Largest per-system order the batched grid kernels keep VMEM-resident
 # ((n, n) matrix + (n, m) RHS per grid program).
 BATCHED_VMEM_MAX_N = 1024
+
+# ---------------------------------------------------------------------------
+# accuracy tiers (the tolerance gate's residual guarantees)
+# ---------------------------------------------------------------------------
+# Tightest relative residual the bf16-factor + f32-refinement path commits
+# to for diagonally-dominant f32 operands: refinement contracts by the bf16
+# unit roundoff (~2^-8) per sweep and floors at f32 residual round-off;
+# 1e-6 is reached in 2-3 sweeps at n ≤ 2048 (test_accuracy_tiers pins it).
+BF16_IR_RESIDUAL_FLOOR = 1e-6
+
+# Residual the randomized rank-k tier guarantees for its documented operand
+# class (numerical rank ≤ k, range-consistent RHS) — see
+# repro.core.randomized; measured each run by the ``rand_lu_n2048_k256``
+# bench row and gated in scripts/check.sh (observed ~5e-7, bound 1e-3).
+RAND_LU_RESIDUAL_BOUND = 1e-3
+
+# Refinement-sweep cap: bounds serving-tier latency; the count actually
+# taken surfaces through repro.core.refine.last_refinement().
+IR_MAX_ITERS = _core_refine.DEFAULT_MAX_ITERS
 
 
 def _itemsize(p: Problem) -> int:
@@ -360,4 +389,131 @@ register(Backend(
     supports=lambda p: p.devices > 1,
     priority=lambda p: 10.0,
     autotune=False,
+))
+
+# ---------------------------------------------------------------------------
+# approximate tiers: admitted by the tolerance gate only (residual_bound
+# set), so default-tolerance problems never see them.  Single-device
+# linear_solve normally composes factor+solve in repro.kernels.ops; a
+# tolerance-carrying call consults this slot first, which is where the
+# mixed-precision path lives (it needs the full operand for refinement).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("block", "tolerance", "max_iters", "interpret", "use_kernel"))
+def _bf16_ir_solve(a, b, *, block, tolerance, max_iters, interpret, use_kernel):
+    """Factor in bf16 (half the factor bytes, MXU-native), refine the
+    solution in f32 against the full-precision operand."""
+    a16 = a.astype(jnp.bfloat16)
+    lu16 = (
+        _k.lu_fused(a16, block=block, interpret=interpret)
+        if use_kernel
+        else _core_blocked.fused_blocked_lu(a16, block=block)
+    ).astype(jnp.float32)
+
+    def correct(r):
+        return _core_solve.lu_solve(lu16, r)
+
+    x, _info = _core_refine.iterative_refinement(
+        a, b, correct(b.astype(jnp.float32)), correct,
+        tolerance=tolerance, max_iters=max_iters,
+    )
+    return x.astype(a.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "tolerance", "max_iters"))
+def _bf16_ir_solve_batched(a, b, *, block, tolerance, max_iters):
+    lu16 = jax.vmap(lambda m: _core_blocked.fused_blocked_lu(m, block=block))(
+        a.astype(jnp.bfloat16)
+    ).astype(jnp.float32)
+
+    def one(ai, lui, bi):
+        correct = lambda r: _core_solve.lu_solve(lui, r)
+        x, _info = _core_refine.iterative_refinement(
+            ai, bi, correct(bi.astype(jnp.float32)), correct,
+            tolerance=tolerance, max_iters=max_iters,
+        )
+        return x
+
+    return jax.vmap(one)(a, lu16, b).astype(a.dtype)
+
+
+def _ir_tolerance(p: Problem) -> float:
+    # refine to the caller's tolerance, never past the tier's floor (extra
+    # sweeps below the floor only burn the iteration cap)
+    return max(p.tolerance, BF16_IR_RESIDUAL_FLOOR)
+
+
+register(Backend(
+    name="bf16_ir", op="linear_solve", structure="dense",
+    call=lambda p, a, b, *, block=256, interpret=None, **_: _bf16_ir_solve(
+        a, b, block=block, tolerance=_ir_tolerance(p), max_iters=IR_MAX_ITERS,
+        interpret=interpret, use_kernel=True),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 5.0,  # the preferred approximate tier once admitted
+    autotune=False,  # not value-identical to the exact tier
+    residual_bound=lambda p: BF16_IR_RESIDUAL_FLOOR,
+    vmem_bytes=lambda p: 3 * p.n * 256 * 2,  # bf16 megakernel scratch slabs
+))
+register(Backend(
+    name="bf16_ir_xla", op="linear_solve", structure="dense",
+    call=lambda p, a, b, *, block=256, interpret=None, **_: _bf16_ir_solve(
+        a, b, block=block, tolerance=_ir_tolerance(p), max_iters=IR_MAX_ITERS,
+        interpret=interpret, use_kernel=False),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 4.0,
+    autotune=False,
+    residual_bound=lambda p: BF16_IR_RESIDUAL_FLOOR,
+))
+register(Backend(
+    name="bf16_ir", op="linear_solve", structure="batched_dense",
+    # the optimizer's grouped (B, n, n) preconditioner systems land here
+    # when the run carries a solve tolerance
+    call=lambda p, a, b, *, block=256, interpret=None, **_: _bf16_ir_solve_batched(
+        a, b, block=block, tolerance=_ir_tolerance(p), max_iters=IR_MAX_ITERS),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 5.0,
+    autotune=False,
+    residual_bound=lambda p: BF16_IR_RESIDUAL_FLOOR,
+))
+
+
+def _rand_rank(p: Problem, rank) -> int:
+    # rank= comes through the public ops; an admitted auto-selection without
+    # one sketches at n/8 (the class contract is the caller's to honour)
+    return int(rank) if rank else max(1, p.n // 8)
+
+
+register(Backend(
+    name="rand_lu", op="factor", structure="dense",
+    call=lambda p, a, *, rank=None, oversample=8, rng_key=None, interpret=None, **_:
+        _core_rand.randomized_lu(
+            a, rank=_rand_rank(p, rank), oversample=oversample, key=rng_key,
+            lu_impl=lambda m: _k.lu_fused(m, interpret=interpret)),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 0.1,  # statically dominated: reach it via rank=/impl=
+    autotune=False,
+    residual_bound=lambda p: RAND_LU_RESIDUAL_BOUND,
+))
+register(Backend(
+    name="rand_lu", op="solve", structure="dense",
+    # consumes RankKFactors, not a packed square factor — never
+    # auto-selected; repro.kernels.ops.lu_solve forces it when handed
+    # rank-k factors (the serve cache's low-rank tier)
+    call=lambda p, factors, b, **_: _core_rand.randomized_solve(factors, b),
+    supports=lambda p: False,
+    priority=lambda p: 0.0,
+    autotune=False,
+    residual_bound=lambda p: RAND_LU_RESIDUAL_BOUND,
+))
+register(Backend(
+    name="rand_lu", op="linear_solve", structure="dense",
+    call=lambda p, a, b, *, rank=None, oversample=8, rng_key=None, interpret=None, **_:
+        _core_rand.randomized_linear_solve(
+            a, b, rank=_rand_rank(p, rank), oversample=oversample, key=rng_key,
+            lu_impl=lambda m: _k.lu_fused(m, interpret=interpret),
+            tolerance=(min(p.tolerance, RAND_LU_RESIDUAL_BOUND) if p.tolerance > 0
+                       else RAND_LU_RESIDUAL_BOUND)),
+    supports=lambda p: _is_f32(p) and _local(p),
+    priority=lambda p: 0.5,  # below bf16_ir: admitted ≠ preferred
+    autotune=False,
+    residual_bound=lambda p: RAND_LU_RESIDUAL_BOUND,
 ))

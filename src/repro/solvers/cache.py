@@ -48,8 +48,11 @@ _VERSION = 1
 
 # fields that identify a measurement row (rhs/batch excluded: timings are
 # dominated by n/bw, and keying on every shape dimension would fragment the
-# cache into single-use entries)
-_KEY_FIELDS = ("op", "structure", "dtype", "bw", "n")
+# cache into single-use entries).  ``tolerance`` IS a key field: approximate
+# tiers are not value-identical to the exact tier, so a measurement taken at
+# a loose tolerance must never steer a tighter problem's selection (entries
+# persisted before the field existed load as tolerance-0 == exact rows).
+_KEY_FIELDS = ("op", "structure", "dtype", "bw", "n", "tolerance")
 
 
 def cache_path() -> str:
@@ -57,11 +60,12 @@ def cache_path() -> str:
 
 
 def _entry_key(e: dict) -> tuple:
-    return tuple(e[f] for f in _KEY_FIELDS)
+    # entries built by hand (tests, old tools) may omit tolerance == exact
+    return tuple(e.get(f, 0.0) if f == "tolerance" else e[f] for f in _KEY_FIELDS)
 
 
 def _problem_key(p: Problem) -> tuple:
-    return (p.op, p.structure, p.dtype, p.bw, p.n)
+    return (p.op, p.structure, p.dtype, p.bw, p.n, float(p.tolerance))
 
 
 class AutotuneCache:
@@ -79,6 +83,7 @@ class AutotuneCache:
             with open(path) as f:
                 raw = json.load(f)
             for e in raw.get("entries", []):
+                e.setdefault("tolerance", 0.0)  # pre-tolerance caches = exact rows
                 if all(f in e for f in _KEY_FIELDS) and isinstance(e.get("times_us"), dict):
                     entries.append(e)
         except (OSError, ValueError):
@@ -116,6 +121,24 @@ class AutotuneCache:
         self.entries.append(entry)
         return entry
 
+    def record_widths(self, problem: Problem, width_us: dict[int, float]) -> dict:
+        """Merge stacked-RHS coalescing-width timings (width → measured µs
+        per dispatch at that width) into ``problem``'s entry.  Consumed by
+        :meth:`best_width` — the serve layer's coalescing-width cap."""
+        key = _problem_key(problem)
+        for e in self.entries:
+            if _entry_key(e) == key:
+                entry = e
+                break
+        else:
+            entry = dict(zip(_KEY_FIELDS, key))
+            entry["times_us"] = {}
+            self.entries.append(entry)
+        entry.setdefault("width_us", {}).update(
+            {str(int(w)): round(float(v), 2) for w, v in width_us.items()}
+        )
+        return entry
+
     # -- lookup -------------------------------------------------------------
     def lookup(self, problem: Problem) -> dict | None:
         key = _problem_key(problem)
@@ -127,7 +150,14 @@ class AutotuneCache:
     def _matches(self, problem: Problem) -> list[tuple[float, dict]]:
         out = []
         for e in self.entries:
-            if (e["op"], e["structure"], e["dtype"]) != (problem.op, problem.structure, problem.dtype):
+            # exact match on every non-size key — in particular tolerance:
+            # nearest-size transfer interpolates over *speed*, never over
+            # *accuracy tier* (a loose-tolerance win must not leak into a
+            # tight dispatch, nor an exact measurement into a loose one
+            # whose candidate set differs).
+            if (e["op"], e["structure"], e["dtype"], e.get("tolerance", 0.0)) != (
+                problem.op, problem.structure, problem.dtype, float(problem.tolerance)
+            ):
                 continue
             n_ratio = max(e["n"], problem.n) / max(min(e["n"], problem.n), 1)
             bwa, bwb = e["bw"] + 1, problem.bw + 1
@@ -145,6 +175,16 @@ class AutotuneCache:
             times = {k: v for k, v in e["times_us"].items() if k in candidates}
             if times:
                 return min(times, key=times.get)
+        return None
+
+    def best_width(self, problem: Problem) -> int | None:
+        """Measured-best coalescing width (most µs-per-column efficient) for
+        the nearest matching stacked-RHS sweep, or None when nothing
+        transferable was measured — callers fall back to full coalescing."""
+        for _, e in self._matches(problem):
+            wu = e.get("width_us")
+            if wu:
+                return int(min(wu, key=lambda w: wu[w] / int(w)))
         return None
 
 

@@ -28,6 +28,10 @@ class Problem:
     ``batch``    leading batch size; 1 for unbatched structures.
     ``rhs``      RHS width for solve ops (1 for a vector RHS); 0 for factor.
     ``devices``  mesh extent the call spans; 1 means single-device.
+    ``tolerance`` largest acceptable relative residual ``|Ax-b|/|b|``;
+                 0.0 (the default) demands the exact tier, so approximate
+                 backends (which declare a ``residual_bound``) are only
+                 admitted when the caller states a tolerance they meet.
     """
 
     op: str
@@ -38,6 +42,7 @@ class Problem:
     batch: int = 1
     rhs: int = 0
     devices: int = 1
+    tolerance: float = 0.0
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -46,6 +51,8 @@ class Problem:
             raise ValueError(
                 f"unknown structure {self.structure!r} (expected one of {STRUCTURES})"
             )
+        if self.tolerance < 0:
+            raise ValueError(f"tolerance must be >= 0, got {self.tolerance}")
 
     @property
     def banded(self) -> bool:
@@ -56,7 +63,9 @@ class Problem:
         return self.structure.startswith("batched_")
 
     @classmethod
-    def from_arrays(cls, op: str, a, b=None, *, bw: int = 0, devices: int = 1) -> "Problem":
+    def from_arrays(
+        cls, op: str, a, b=None, *, bw: int = 0, devices: int = 1, tolerance: float = 0.0
+    ) -> "Problem":
         """Build a descriptor from the operand arrays.
 
         ``a`` is the matrix operand: ``(n, n)`` dense, ``(n, 2bw+1)``
@@ -91,4 +100,5 @@ class Problem:
             batch=batch,
             rhs=rhs,
             devices=int(devices),
+            tolerance=float(tolerance),
         )

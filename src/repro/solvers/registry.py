@@ -7,7 +7,11 @@ kernels, multi-device shard_map LU, pure-jnp mirrors) registers a
 three-stage funnel:
 
 1. **capability filter** — ``Backend.supports(problem)`` prunes backends
-   that cannot run the problem at all (dtype, VMEM footprint, device count);
+   that cannot run the problem at all (dtype, VMEM footprint, device count),
+   and the **tolerance gate** prunes approximate backends (those declaring a
+   ``residual_bound``) unless the problem carries a tolerance that bound
+   meets — a default (``tolerance == 0``) problem only ever sees the exact
+   tier, preserving pre-tolerance selection bitwise;
 2. **measured selection** — the autotune cache
    (:mod:`repro.solvers.cache`) picks the fastest *measured* capable
    backend among those flagged ``autotune=True``;
@@ -62,6 +66,11 @@ class Backend:
                   slots).
     ``vmem_bytes`` optional footprint estimate (documentation + capability
                   predicates build on it).
+    ``residual_bound`` relative residual ``|Ax-b|/|b|`` the backend
+                  guarantees for its documented operand class, or None for
+                  exact backends.  Approximate backends (non-None) only
+                  enter auto-selection when ``problem.tolerance`` is set
+                  and at least as loose as this bound.
     """
 
     name: str
@@ -72,6 +81,7 @@ class Backend:
     priority: Callable[[Problem], float] = lambda p: 0.0
     autotune: bool = True
     vmem_bytes: Callable[[Problem], int] | None = None
+    residual_bound: Callable[[Problem], float] | None = None
 
 
 _REGISTRY: dict[tuple[str, str], dict[str, Backend]] = {}
@@ -102,10 +112,23 @@ def get_backend(op: str, structure: str, name: str) -> Backend:
     return slot[name]
 
 
+def _tolerance_admits(backend: Backend, problem: Problem) -> bool:
+    """The accuracy gate of the funnel: exact backends always pass;
+    approximate backends pass only when the caller declared a tolerance at
+    least as loose as the backend's guaranteed residual bound."""
+    if backend.residual_bound is None:
+        return True
+    return problem.tolerance > 0 and backend.residual_bound(problem) <= problem.tolerance
+
+
 def candidates(problem: Problem, *, allow: Callable[[Backend], bool] | None = None) -> list[Backend]:
-    """Capability-filtered backends for ``problem`` (optionally restricted
-    by ``allow``, e.g. the legacy ``impl="pallas"`` pallas-only auto)."""
-    out = [b for b in backends_for(problem.op, problem.structure) if b.supports(problem)]
+    """Capability- and tolerance-filtered backends for ``problem``
+    (optionally restricted by ``allow``, e.g. the legacy ``impl="pallas"``
+    pallas-only auto)."""
+    out = [
+        b for b in backends_for(problem.op, problem.structure)
+        if b.supports(problem) and _tolerance_admits(b, problem)
+    ]
     if allow is not None:
         out = [b for b in out if allow(b)]
     return out

@@ -128,6 +128,7 @@ def ebv_preconditioned(
     solver_block: int = 128,
     graft_scale: float = 0.3,
     solver_impl: str | None = None,
+    solve_tolerance: float | str | None = None,
 ) -> Optimizer:
     """Second-order preconditioning via EbV LU solves.
 
@@ -149,8 +150,26 @@ def ebv_preconditioned(
     kernel (:mod:`repro.kernels.batched_lu`), one grid program per
     parameter-factor system, instead of the per-leaf pure-jnp reference
     this optimizer used to unroll.  ``solver_impl`` forces a backend (e.g.
-    ``"xla"`` for the vmapped mirror)."""
+    ``"xla"`` for the vmapped mirror).
+
+    ``solve_tolerance`` opens the registry's approximate solver tiers for
+    the preconditioner solves: a float is passed through as the largest
+    acceptable relative residual; ``"auto"`` derives it from the EMA noise
+    floor — the covariance estimate ``C`` carries relative sampling noise
+    of order ``1 − β₂`` per update (each EMA step replaces that fraction of
+    ``C`` with a single-sample ``G Gᵀ``), so solving the preconditioner
+    system much past a tenth of that noise is numerical theatre.  ``None``
+    (the default) keeps the exact tier — bitwise-identical to the
+    pre-tolerance optimizer."""
     from repro.kernels import ops as kops
+
+    if solve_tolerance == "auto":
+        # EMA noise floor: (1 − β₂) relative covariance noise, solved one
+        # decade past it; floored at bf16_ir's guaranteed residual so the
+        # derived tolerance always admits at least one approximate tier.
+        solve_tol = max(1e-6, (1.0 - b2) * 0.1)
+    else:
+        solve_tol = float(solve_tolerance) if solve_tolerance else 0.0
 
     adam = adamw(
         schedule, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
@@ -226,7 +245,10 @@ def ebv_preconditioned(
             r3 = jnp.stack(
                 [jnp.pad(r, ((0, 0), (0, mmax - r.shape[1]))) for _, _, r in items]
             )
-            x3 = kops.linear_solve(a3, r3, impl=solver_impl, block=min(solver_block, n))
+            x3 = kops.linear_solve(
+                a3, r3, impl=solver_impl, block=min(solver_block, n),
+                tolerance=solve_tol,
+            )
             for j, (i, _, r) in enumerate(items):
                 solved[i] = x3[j, :, : r.shape[1]]
 

@@ -1,0 +1,374 @@
+"""Accuracy-tiered solver stack (ISSUE 6): the tolerance axis through
+Problem → registry funnel → approximate backends → optimizer/serve
+customers, plus cache-key integrity for both the autotune cache and the
+solve service's tiered factorization cache."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_diagonally_dominant
+from repro.core.randomized import RankKFactors, randomized_lu, randomized_solve
+from repro.kernels import ops
+from repro.solvers import Problem, candidates, record_dispatches, select
+from repro.solvers import cache as scache
+from repro.solvers.backends import (
+    BF16_IR_RESIDUAL_FLOOR,
+    IR_MAX_ITERS,
+    RAND_LU_RESIDUAL_BOUND,
+)
+
+
+@pytest.fixture
+def no_cache(monkeypatch, tmp_path):
+    """Pin an absent cache file so selection is purely static."""
+    monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(tmp_path / "absent.json"))
+    scache.invalidate()
+    yield
+    scache.invalidate()
+
+
+def _env_cache(monkeypatch, tmp_path, entries):
+    path = tmp_path / "cache.json"
+    path.write_text(json.dumps({"version": 1, "entries": entries}))
+    monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(path))
+    scache.invalidate()
+    return path
+
+
+def _dd(n, seed=0):
+    return make_diagonally_dominant(jax.random.PRNGKey(seed), n)
+
+
+def _lowrank(n, k, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    a = (jax.random.normal(k1, (n, k)) @ jax.random.normal(k2, (k, n))) / k
+    xtrue = jax.random.normal(k3, (n,))
+    return a, a @ xtrue, xtrue
+
+
+def _rel_resid(a, x, b):
+    return float(jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b))
+
+
+# ---------------------------------------------------------------------------
+# funnel: tolerance gate
+# ---------------------------------------------------------------------------
+def test_default_tolerance_selects_exact_backends_only(no_cache):
+    """tolerance=0.0 (the default) must preserve pre-tolerance selection:
+    no approximate backend is even a candidate."""
+    for op, structure in [
+        ("factor", "dense"),
+        ("solve", "dense"),
+        ("linear_solve", "dense"),
+        ("linear_solve", "batched_dense"),
+    ]:
+        p = Problem(op=op, structure=structure, n=256,
+                    batch=4 if structure.startswith("batched") else 1)
+        for b in candidates(p):
+            assert b.residual_bound is None, (
+                f"approximate backend {b.name} admitted at tolerance=0.0")
+    # and the static winners are the historical ones
+    assert select(Problem(op="factor", structure="dense", n=256)).name == "pallas_fused"
+
+
+def test_tolerance_gate_admits_by_declared_bound(no_cache):
+    loose = Problem(op="linear_solve", structure="dense", n=256, tolerance=1e-4)
+    names = {b.name for b in candidates(loose)}
+    assert "bf16_ir" in names and "bf16_ir_xla" in names
+    # tighter than any approximate tier's guarantee: back to exact-only
+    tight = Problem(op="linear_solve", structure="dense", n=256, tolerance=1e-9)
+    for b in candidates(tight):
+        assert b.residual_bound is None
+
+
+def test_default_tolerance_results_bitwise_unchanged(no_cache):
+    a, b = _dd(128), jax.random.normal(jax.random.PRNGKey(1), (128,))
+    x_default = ops.linear_solve(a, b)
+    x_explicit = ops.linear_solve(a, b, tolerance=0.0)
+    np.testing.assert_array_equal(np.asarray(x_default), np.asarray(x_explicit))
+
+
+# ---------------------------------------------------------------------------
+# bf16 + iterative refinement
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [256, 1024])
+def test_bf16_ir_converges_to_requested_residual(no_cache, n):
+    """ISSUE 6 acceptance: bf16 factor + f32 refinement reaches the
+    requested f32-level residual within the refinement cap."""
+    from repro.core.refine import last_refinement
+
+    a = _dd(n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    tol = 1e-5
+    x = ops.linear_solve(a, b, tolerance=tol, impl="bf16_ir")
+    jax.block_until_ready(x)
+    assert _rel_resid(a, x, b) <= tol
+    info = last_refinement()
+    assert info["iterations"] is not None and info["iterations"] <= IR_MAX_ITERS
+
+
+def test_bf16_ir_auto_selected_when_tolerance_permits(no_cache):
+    a = _dd(256)
+    b = jax.random.normal(jax.random.PRNGKey(1), (256,))
+    with record_dispatches() as log:
+        x = ops.linear_solve(a, b, tolerance=1e-5)
+    names = [name for _, name in log]
+    assert any(n.startswith("bf16_ir") for n in names), names
+    assert _rel_resid(a, x, b) <= 1e-5
+
+
+# ---------------------------------------------------------------------------
+# randomized rank-k tier
+# ---------------------------------------------------------------------------
+def test_randomized_lu_factors_and_solve():
+    n, k = 192, 24
+    a, b, _ = _lowrank(n, k)
+    f = randomized_lu(a, rank=k)
+    assert isinstance(f, RankKFactors) and f.rank == k
+    # near-orthonormal basis (lᵀl ≈ I; the Gram ridge blurs directions at
+    # the operand's smallest kept singular value — the residual bound below
+    # is the actual contract)
+    np.testing.assert_allclose(np.asarray(f.l.T @ f.l), np.eye(k), atol=5e-2)
+    x = randomized_solve(f, b)
+    assert _rel_resid(a, x, b) <= RAND_LU_RESIDUAL_BOUND
+
+
+def test_rand_lu_through_public_ops(no_cache):
+    n, k = 256, 32
+    a, b, _ = _lowrank(n, k)
+    # rank= forces the randomized tier end to end
+    x = ops.linear_solve(a, b, rank=k, tolerance=RAND_LU_RESIDUAL_BOUND)
+    assert _rel_resid(a, x, b) <= RAND_LU_RESIDUAL_BOUND
+    # factor/solve split: ops.lu(rank=) returns RankKFactors and
+    # ops.lu_solve recognises the factor type
+    f = ops.lu(a, rank=k, tolerance=RAND_LU_RESIDUAL_BOUND)
+    assert isinstance(f, RankKFactors)
+    x2 = ops.lu_solve(f, b, tolerance=RAND_LU_RESIDUAL_BOUND)
+    assert _rel_resid(a, x2, b) <= RAND_LU_RESIDUAL_BOUND
+
+
+# ---------------------------------------------------------------------------
+# cache-key integrity (the regression the ISSUE names)
+# ---------------------------------------------------------------------------
+def test_loose_measured_win_never_serves_tight_problem(monkeypatch, tmp_path):
+    """A measured autotune win recorded at a loose tolerance must be
+    invisible to a tight/default-tolerance Problem: tolerance is an exact
+    key field, and the tolerance gate prunes approximate backends before
+    measured selection anyway."""
+    entry = {
+        "op": "linear_solve", "structure": "dense", "n": 256, "bw": 0,
+        "dtype": "float32", "tolerance": 1e-3,
+        "times_us": {"bf16_ir": 1.0, "xla": 9e9},
+    }
+    _env_cache(monkeypatch, tmp_path, [entry])
+    try:
+        # loose problem: the measured row steers selection
+        loose = Problem(op="linear_solve", structure="dense", n=256, tolerance=1e-3)
+        assert select(loose).name == "bf16_ir"
+        # tight/default problem: measured row must NOT transfer — the cache
+        # has nothing for it AND the gate prunes bf16_ir from candidacy, so
+        # ops.linear_solve falls back to the exact factor+solve composition
+        tight = Problem(op="linear_solve", structure="dense", n=256)
+        assert scache.get_cache().lookup(tight) is None
+        assert not any(b.name == "bf16_ir" for b in candidates(tight))
+        a, b = _dd(256), jax.random.normal(jax.random.PRNGKey(1), (256,))
+        with record_dispatches() as log:
+            ops.linear_solve(a, b)
+        assert [p.op for p, _ in log] == ["factor", "solve"]
+        # ...and even a loose row naming an exact backend doesn't leak into
+        # a different-dtype problem (dtype is a key field too)
+        other_dtype = Problem(op="linear_solve", structure="dense", n=256,
+                              dtype="bfloat16", tolerance=1e-3)
+        assert scache.get_cache().lookup(other_dtype) is None
+    finally:
+        scache.invalidate()
+
+
+def test_pre_tolerance_cache_rows_load_as_exact(monkeypatch, tmp_path):
+    """Caches written before the tolerance axis (no tolerance field) must
+    deserialize as exact rows, preserving old behaviour."""
+    entry = {
+        "op": "factor", "structure": "dense", "n": 256, "bw": 0,
+        "dtype": "float32", "times_us": {"xla": 1.0, "pallas_fused": 9e9},
+    }
+    _env_cache(monkeypatch, tmp_path, [entry])
+    try:
+        assert select(Problem(op="factor", structure="dense", n=256)).name == "xla"
+    finally:
+        scache.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# serve: tiered factorization cache + coalescing-width cap
+# ---------------------------------------------------------------------------
+def test_service_tier_never_reverse(no_cache):
+    """An approximate-tier cached factor may serve looser requests but
+    NEVER a tighter one; a tight factor serves looser requests."""
+    from repro.serve.solve_service import SolveService
+
+    n, k = 128, 16
+    a, b, _ = _lowrank(n, k, seed=3)
+    svc = SolveService()
+    svc.solve(a, b, tolerance=RAND_LU_RESIDUAL_BOUND, rank=k)
+    fp = next(iter(svc._lru))
+    assert sorted(svc._lru[fp]) == [RAND_LU_RESIDUAL_BOUND]
+    assert svc.stats.approx_solves >= 1
+
+    # tolerance=0.0 request on the SAME matrix: must miss and refactor exact
+    misses = svc.stats.cache_misses
+    factors_before = svc.stats.factor_dispatches
+    x = svc.solve(a, b)
+    assert svc.stats.cache_misses == misses + 1
+    assert svc.stats.factor_dispatches > factors_before
+    assert sorted(svc._lru[fp]) == [0.0, RAND_LU_RESIDUAL_BOUND]
+    assert _rel_resid(a, x, b) <= 1e-4  # exact answer, not the rank-k one
+
+    # loose request now hits — and picks the TIGHTEST eligible tier (0.0)
+    hits = svc.stats.cache_hits
+    svc.solve(a, b, tolerance=5e-2)
+    assert svc.stats.cache_hits == hits + 1
+
+
+def test_service_rank_request_validates_tolerance(no_cache):
+    from repro.serve.solve_service import SolveService
+
+    svc = SolveService()
+    a, b, _ = _lowrank(64, 8)
+    with pytest.raises(ValueError):
+        svc.submit(a, b, rank=8)  # tolerance 0.0 < the rank tier's bound
+    with pytest.raises(ValueError):
+        svc.submit(a, b, bw=1, rank=8, tolerance=1e-2)  # dense-only
+
+
+def test_service_tolerance_in_scheduler_bucket(no_cache):
+    """Same matrix, different tolerances: separate buckets, separate
+    coalescing groups (group tolerance = tightest member's)."""
+    from repro.serve.solve_service import SolveService
+
+    n = 64
+    a = _dd(n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    svc = SolveService()
+    t1 = svc.submit(a, b)
+    t2 = svc.submit(a, b, tolerance=1e-2)
+    out = svc.flush()
+    # exact group factors once; the loose group hits the tier-0 factor
+    assert svc.stats.factor_dispatches == 1
+    np.testing.assert_allclose(np.asarray(out[t1]), np.asarray(out[t2]), rtol=1e-5)
+
+
+def test_service_coalescing_width_cap(monkeypatch, tmp_path):
+    """A measured width sweep caps stacked-RHS dispatch width; the chunked
+    results are bitwise-identical to the uncapped coalesced solve."""
+    from repro.serve.solve_service import SolveService
+
+    n = 512
+    entry = {
+        "op": "solve", "structure": "dense", "n": n, "bw": 0,
+        "dtype": "float32", "tolerance": 0.0,
+        "times_us": {"xla": 1.0},
+        "width_us": {"8": 100.0, "32": 1000.0, "128": 5000.0},
+    }
+    _env_cache(monkeypatch, tmp_path, [entry])
+    try:
+        a = _dd(n)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n, 20))
+        svc = SolveService()
+        x = svc.solve(a, b)
+        assert svc.stats.width_capped_dispatches == 2  # 20 cols → 8 + 8 + 4
+        assert svc.stats.solve_dispatches == 3
+        # uncapped reference (empty cache): identical columns
+        monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(tmp_path / "absent.json"))
+        scache.invalidate()
+        svc2 = SolveService()
+        x_ref = svc2.solve(a, b)
+        assert svc2.stats.width_capped_dispatches == 0
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(x_ref))
+    finally:
+        scache.invalidate()
+
+
+# ---------------------------------------------------------------------------
+# optimizer customer
+# ---------------------------------------------------------------------------
+def test_optimizer_auto_tolerance_dispatches_approx_tier(no_cache):
+    """ISSUE 6 acceptance: a tolerance-carrying optimizer run dispatches at
+    least one approximate-tier solve (the EMA noise floor at b2=0.95 admits
+    the bf16+IR batched backend)."""
+    from repro.train import optimizer as opt_lib
+
+    d, nleaves = 64, 3
+    params = {f"w{i}": 0.02 * jax.random.normal(jax.random.PRNGKey(10 + i), (d, d))
+              for i in range(nleaves)}
+    grads = {f"w{i}": jax.random.normal(jax.random.PRNGKey(20 + i), (d, d))
+             for i in range(nleaves)}
+    opt = opt_lib.ebv_preconditioned(opt_lib.constant_lr(1e-3), b2=0.95,
+                                     solve_tolerance="auto")
+    state = opt.init(params)
+    with record_dispatches() as log:
+        updates, state = opt.update(grads, state, params)
+    approx = [name for p, name in log if name.startswith("bf16_ir")]
+    assert approx, f"no approximate-tier dispatch in {[(p.op, n) for p, n in log]}"
+    for leaf in jax.tree.leaves(updates):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_optimizer_default_stays_exact(no_cache):
+    from repro.train import optimizer as opt_lib
+
+    d = 32
+    params = {"w": 0.02 * jax.random.normal(jax.random.PRNGKey(0), (d, d))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (d, d))}
+    opt = opt_lib.ebv_preconditioned(opt_lib.constant_lr(1e-3))
+    state = opt.init(params)
+    with record_dispatches() as log:
+        opt.update(grads, state, params)
+    assert not any(name.startswith("bf16_ir") or name == "rand_lu"
+                   for _, name in log)
+
+
+# ---------------------------------------------------------------------------
+# MoE tail-batch routing
+# ---------------------------------------------------------------------------
+def test_moe_tail_group_routes_like_full(no_cache):
+    """A zero-padded underfull tail group must route its real rows exactly
+    like a direct dispatch of just those rows: pad tokens consume no
+    capacity, contribute nothing, and the aux loss matches."""
+    from repro.configs.base import ModelConfig
+    from repro.models.moe import _moe_local, init_moe
+
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      num_experts=8, experts_per_token=2, dtype="float32")
+    p = {k: v[0] for k, v in init_moe(jax.random.PRNGKey(0), cfg).items()}
+    t, r, d = 64, 23, 32
+    x_real = jax.random.normal(jax.random.PRNGKey(1), (r, d))
+    x_pad = jnp.concatenate([x_real, jnp.zeros((t - r, d))])
+    out_direct, aux_direct = _moe_local(p, x_real, cfg)
+    out_masked, aux_masked = _moe_local(p, x_pad, cfg, valid_count=jnp.int32(r))
+    np.testing.assert_array_equal(np.asarray(out_masked[:r]), np.asarray(out_direct))
+    assert float(jnp.max(jnp.abs(out_masked[r:]))) == 0.0
+    np.testing.assert_allclose(float(aux_masked), float(aux_direct), rtol=1e-6)
+    # full groups: the masked path is bitwise the unmasked body
+    o_none, a_none = _moe_local(p, x_pad, cfg)
+    o_full, a_full = _moe_local(p, x_pad, cfg, valid_count=jnp.int32(t))
+    np.testing.assert_array_equal(np.asarray(o_none), np.asarray(o_full))
+
+
+def test_moe_grouped_tail_under_jit(no_cache):
+    from repro.configs.base import ModelConfig
+    from repro.models.moe import _moe_grouped, init_moe
+
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      num_experts=4, experts_per_token=2, dtype="float32")
+    p = {k: v[0] for k, v in init_moe(jax.random.PRNGKey(0), cfg).items()}
+    xt = jax.random.normal(jax.random.PRNGKey(2), (40, 16))
+    out, aux = _moe_grouped(p, xt, cfg, group_tokens=16)  # tail group of 8
+    out_j, aux_j = jax.jit(
+        lambda x: _moe_grouped(p, x, cfg, group_tokens=16))(xt)
+    assert out.shape == (40, 16) and np.isfinite(float(aux))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out_j))

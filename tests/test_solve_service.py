@@ -147,9 +147,9 @@ def test_deadline_orders_flush_groups(dense_system):
         fps = []
         orig = svc._factors_for
 
-        def spy(req):
+        def spy(req, tolerance):
             fps.append(req.fp)
-            return orig(req)
+            return orig(req, tolerance)
 
         svc._factors_for = spy
         svc.flush()
