@@ -155,3 +155,17 @@ class Scheduler:
             self.stats.padding_tokens += r.padded
         self._queue.clear()
         return out
+
+    def restore(self, entries: list[ScheduledRequest]) -> None:
+        """Return un-processed ``drain``/``take`` entries to the queue.
+
+        Transactional callers (a flush that fails mid-way) must not lose the
+        remainder of the batch.  Entries keep their original ``seq`` and
+        ``deadline``, so re-draining preserves the original order, and the
+        admission accounting is reversed so stats reflect only work actually
+        handed off."""
+        for r in entries:
+            self._queue.append(r)
+            self.stats.admitted -= 1
+            self.stats.real_tokens -= r.real
+            self.stats.padding_tokens -= r.padded

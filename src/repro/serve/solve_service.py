@@ -215,15 +215,18 @@ class SolveService:
         :meth:`result`, so a convenience :meth:`solve` draining the queue
         cannot lose earlier submissions' answers."""
         counting = solvers.add_dispatch_hook(self._count_dispatch)
+        drained = self._sched.drain()
+        processed: set[int] = set()  # seq of every entry whose group completed
         try:
             results: dict[int, object] = {}
-            groups: OrderedDict[tuple, list[SolveRequest]] = OrderedDict()
-            for entry in self._sched.drain():
+            groups: OrderedDict[tuple, list] = OrderedDict()
+            for entry in drained:
                 p = entry.payload
                 # rank-tier requests coalesce separately from exact requests
                 # against the same matrix — they want different factors.
-                groups.setdefault((p.fp, p.rank), []).append(p)
-            for (fp, rank), reqs in groups.items():
+                groups.setdefault((p.fp, p.rank), []).append(entry)
+            for (fp, rank), entries in groups.items():
+                reqs = [e.payload for e in entries]
                 # tightest member tolerance governs the whole coalesced
                 # dispatch: every member accepts its residual.
                 group_tol = min(r.tolerance for r in reqs)
@@ -238,10 +241,19 @@ class SolveService:
                 x = self._dispatch_solve(reqs[0], factors, stacked, group_tol)
                 for r, xr in zip(reqs, split_rhs(x, widths, squeezes)):
                     results[r.ticket] = xr
-            self._done.update(results)
+                processed.update(e.seq for e in entries)
             return results
         finally:
             solvers.remove_dispatch_hook(counting)
+            # commit every completed group's answers even when a later group
+            # raised: callers redeem them via result().
+            self._done.update(results)
+            # transactional drain: an exception mid-flush must not lose the
+            # rest of the batch — unprocessed entries go back to the queue
+            # with their original seq/deadline intact.
+            remaining = [e for e in drained if e.seq not in processed]
+            if remaining:
+                self._sched.restore(remaining)
 
     def _dispatch_solve(self, req: SolveRequest, factors, stacked, tolerance: float):
         """One coalesced substitution — chunked at the autotuned coalescing

@@ -158,6 +158,43 @@ def test_deadline_orders_flush_groups(dense_system):
     assert fps[0] == fingerprint(a2)  # deadline group factored first
 
 
+def test_flush_requeues_unprocessed_on_error(dense_system):
+    """An exception while serving one group must not drop the rest of the
+    drained batch: unprocessed requests return to the queue and a later
+    flush serves them."""
+    a, bs = dense_system
+    a2 = make_diagonally_dominant(jax.random.PRNGKey(21), a.shape[0])
+    a3 = make_diagonally_dominant(jax.random.PRNGKey(22), a.shape[0])
+    svc = SolveService()
+    t1 = svc.submit(a, bs[0])
+    t2 = svc.submit(a2, bs[1])
+    t3 = svc.submit(a3, bs[2])
+    bad_fp = fingerprint(a2)
+    orig = svc._factors_for
+
+    def boom(req, tolerance):
+        if req.fp == bad_fp:
+            raise RuntimeError("injected factor failure")
+        return orig(req, tolerance)
+
+    svc._factors_for = boom
+    with pytest.raises(RuntimeError, match="injected factor failure"):
+        svc.flush()
+    # the failing group AND everything drained after it went back to the queue
+    assert svc.pending() == 2
+    # the group that completed before the failure stays redeemable
+    np.testing.assert_array_equal(
+        np.asarray(svc.result(t1)),
+        np.asarray(kops.lu_solve(kops.lu(a), bs[0])),
+    )
+    svc._factors_for = orig
+    results = svc.flush()
+    assert set(results) == {t2, t3}
+    np.testing.assert_array_equal(
+        np.asarray(results[t3]), np.asarray(kops.lu_solve(kops.lu(a3), bs[2]))
+    )
+
+
 def test_solve_convenience_retains_other_results(dense_system):
     """solve() drains the whole queue; earlier submissions' answers stay
     redeemable via result() instead of being silently discarded."""
