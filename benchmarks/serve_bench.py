@@ -12,6 +12,14 @@ Rows (all ``us_per_call``):
 * ``serve_solve_cache_refactor`` / ``serve_solve_cache_cached`` — one
   solve request against a cold vs warm factorization cache; the ratio is
   the factor-once/solve-many win and is gated (>= 2x) by scripts/check.sh.
+
+``python -m benchmarks.serve_bench --chaos`` runs :func:`run_chaos`
+instead: a deterministic fault drill (poisoned flush group, crashed
+preferred tiers) that asserts the failure-isolation contract end to end
+and gates the *escalated*-path residuals against the same bounds
+scripts/check.sh holds the default path to.  Chaos rows are printed but
+never written to ``BENCH_kernels.json`` — they measure survival, not
+speed, and must not participate in the cross-PR perf gate.
 """
 from __future__ import annotations
 
@@ -96,3 +104,115 @@ def run(smoke: bool = True) -> dict[str, float]:
     emit("serve_solve_cache_cached", t,
          f"{rows['serve_solve_cache_refactor'] / t:.1f}x_vs_refactor")
     return rows
+
+
+def run_chaos() -> None:
+    """Deterministic fault drill for the failure-isolating pipeline.
+
+    Three scenarios, each asserting internally (a broken isolation
+    contract fails the process, there is no row to gate):
+
+    1. **Flush isolation** — one NaN-poisoned coalesced group among three
+       in a single flush: the poisoned tickets resolve to structured
+       :class:`~repro.solvers.SolveFailure` values, the healthy
+       flush-mates stay bitwise-identical to an undisturbed service, the
+       bad fingerprint is quarantined and never cached.
+    2. **bf16_ir escalation residual** — the preferred mixed-precision
+       tier crashes (injected) and the funnel serves via ``bf16_ir_xla``;
+       the escalated answer must still meet the requested 1e-5 tolerance.
+    3. **rand_lu escalation residual** — both bf16 tiers crash on a
+       rank-k operand and the funnel bottoms out at the randomized tier;
+       the answer must meet ``RAND_LU_RESIDUAL_BOUND``.
+
+    The residual bounds are the same ones scripts/check.sh gates the
+    default path's bench rows against — chaos proves the *degraded* path
+    honours the tier contract too.
+    """
+    from repro import solvers
+    from repro.core import make_diagonally_dominant, relative_residual
+    from repro.kernels import ops as kops
+    from repro.serve.solve_service import SolveService, fingerprint
+    from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
+
+    # --- 1. flush isolation: poisoned group among healthy flush-mates
+    n1, n2, n3 = 192, 256, 320
+    a1 = make_diagonally_dominant(jax.random.PRNGKey(1), n1)
+    a2 = make_diagonally_dominant(jax.random.PRNGKey(2), n2).at[0, 0].set(jnp.nan)
+    a3 = make_diagonally_dominant(jax.random.PRNGKey(3), n3)
+    b1 = jax.random.normal(jax.random.PRNGKey(11), (n1,))
+    b2 = jax.random.normal(jax.random.PRNGKey(12), (n2,))
+    b3 = jax.random.normal(jax.random.PRNGKey(13), (n3,))
+
+    ref = SolveService()
+    ref1, ref3 = ref.solve(a1, b1), ref.solve(a3, b3)
+
+    svc = SolveService()
+    t1 = svc.submit(a1, b1)
+    t2a, t2b = svc.submit(a2, b2), svc.submit(a2, b2 * 2.0)
+    t3 = svc.submit(a3, b3)
+    res = svc.flush()
+    for t in (t2a, t2b):
+        assert isinstance(res[t], solvers.SolveFailure), res[t]
+        assert res[t].chain, "SolveFailure carries no escalation chain"
+    np.testing.assert_array_equal(np.asarray(res[t1]), np.asarray(ref1))
+    np.testing.assert_array_equal(np.asarray(res[t3]), np.asarray(ref3))
+    assert fingerprint(a2) not in svc._lru, "unhealthy factor entered the cache"
+    assert fingerprint(a2) in svc.quarantined_fingerprints()
+    assert svc.stats.failed_requests == 2 and svc.stats.escalations > 0
+    solvers.clear_demotions()
+    emit("chaos_flush_isolation", 0.0,
+         f"ok;failed={svc.stats.failed_requests};"
+         f"escalations={svc.stats.escalations}")
+
+    # --- 2. bf16_ir tier crash: bf16_ir_xla must serve within tolerance
+    n = 1024
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    b = jax.random.normal(jax.random.PRNGKey(21), (n,))
+    tol = 1e-5
+    with solvers.record_escalations() as esc:
+        with solvers.inject(backend_raises=True, backend="bf16_ir",
+                            op="linear_solve"):
+            x = kops.linear_solve(a, b, tolerance=tol)
+    assert any(e[2] == "bf16_ir_xla" for e in esc), esc
+    resid = float(relative_residual(a, b, x))
+    assert resid <= tol, (
+        f"escalated bf16_ir_xla path residual {resid:.3e} > {tol:.1e}")
+    emit("chaos_bf16_ir_escalated_residual", 0.0, f"{resid:.3e}<= {tol:.1e}")
+
+    # --- 3. both bf16 tiers crash on a rank-k operand: rand_lu serves.
+    # No rank= here — an explicit rank forces impl="rand_lu" and bypasses
+    # the funnel; instead the operand's numerical rank equals the tier's
+    # default sketch rank (n // 8) so the auto-escalated path is in-class.
+    nr = 1024
+    k = nr // 8
+    g1 = jax.random.normal(jax.random.PRNGKey(31), (nr, k))
+    g2 = jax.random.normal(jax.random.PRNGKey(32), (k, nr))
+    alr = (g1 @ g2) / k
+    blr = alr @ jax.random.normal(jax.random.PRNGKey(33), (nr,))
+    with solvers.record_escalations() as esc:
+        with solvers.inject(backend_raises=True, backend="bf16_ir",
+                            op="linear_solve"), \
+             solvers.inject(backend_raises=True, backend="bf16_ir_xla",
+                            op="linear_solve"):
+            x = kops.linear_solve(alr, blr, tolerance=RAND_LU_RESIDUAL_BOUND)
+    assert any(e[2] == "rand_lu" for e in esc), esc
+    resid = float(jnp.linalg.norm(alr @ x - blr) / jnp.linalg.norm(blr))
+    assert resid <= RAND_LU_RESIDUAL_BOUND, (
+        f"escalated rand_lu path residual {resid:.3e} > "
+        f"{RAND_LU_RESIDUAL_BOUND:.1e}")
+    emit("chaos_rand_lu_escalated_residual", 0.0,
+         f"{resid:.3e}<= {RAND_LU_RESIDUAL_BOUND:.1e}")
+    print("chaos drill passed: isolation + escalated-path residual gates",
+          flush=True)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--chaos", action="store_true",
+                        help="run the fault drill instead of the timing rows")
+    if parser.parse_args().chaos:
+        run_chaos()
+    else:
+        run()

@@ -19,6 +19,7 @@
 #     scripts/check.sh tests/test_distributed.py -k lu
 #     SKIP_SMOKE=1 scripts/check.sh    # tests only
 #     SKIP_AUTOTUNE=1 scripts/check.sh # skip the cache-seeding stage
+#     SKIP_CHAOS=1 scripts/check.sh    # skip the fault-injection drill
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export REPRO_SOLVERS_CACHE="${REPRO_SOLVERS_CACHE:-$PWD/.autotune_cache.json}"
@@ -26,6 +27,15 @@ if [[ "${SKIP_AUTOTUNE:-0}" != "1" ]]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/autotune.py --smoke
 fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+if [[ "${SKIP_CHAOS:-0}" != "1" ]]; then
+    # fault-injection drill (benchmarks/serve_bench.py --chaos): a poisoned
+    # flush group must be isolated, and the escalated backends — bf16_ir_xla
+    # when bf16_ir crashes, rand_lu when both bf16 tiers crash — must still
+    # meet the same residual bounds the accuracy gates below hold the
+    # default path to.  Asserts internally; writes nothing to
+    # BENCH_kernels.json (chaos measures survival, not speed).
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.serve_bench --chaos
+fi
 if [[ "${SKIP_SMOKE:-0}" != "1" ]]; then
     prev_bench=""
     if [[ -f BENCH_kernels.json ]]; then

@@ -9,6 +9,10 @@ Layers:
   * ``batched``      — vmapped many-small-systems path (optimizer use).
   * ``distributed``  — multi-chip shard_map factorization with EbV-folded
                        block placement.
+  * ``health``       — post-factor screening (min pivot, element growth,
+                       finiteness) for the no-pivot contract.
+  * ``pivoted``      — partial-pivoting last-resort fallback for operands
+                       outside the no-pivot class.
 """
 from .ebv import (
     ebv_lu,
@@ -40,6 +44,14 @@ from .banded import (
 )
 from .batched import batched_ebv_lu, batched_lu_solve, batched_linear_solve
 from .distributed import distributed_blocked_lu, distributed_lu_solve, placement_tables
+from .health import (
+    DEFAULT_THRESHOLDS,
+    FactorHealth,
+    HealthThresholds,
+    factor_health,
+    relative_residual,
+)
+from .pivoted import PivotedFactors, pivoted_lu, pivoted_solve
 
 __all__ = [
     "ebv_lu", "ebv_step", "equalized_pairing", "pair_lengths", "fold_index",
@@ -51,4 +63,6 @@ __all__ = [
     "make_banded_dd",
     "batched_ebv_lu", "batched_lu_solve", "batched_linear_solve",
     "distributed_blocked_lu", "distributed_lu_solve", "placement_tables",
+    "FactorHealth", "HealthThresholds", "DEFAULT_THRESHOLDS", "factor_health",
+    "relative_residual", "PivotedFactors", "pivoted_lu", "pivoted_solve",
 ]

@@ -1,0 +1,79 @@
+"""Partial-pivoting dense LU — the last-resort fallback tier.
+
+The EbV contract is *no pivoting* (fixed elimination order is what makes
+the bi-vector pairing equalizable), and every fast path in the repo honours
+it.  But an operand with a vanishing leading pivot is simply outside the
+no-pivot class: the fused kernel, its mirror, and the legacy drivers all
+produce the same Inf/NaN factors for it.  This module is the escape hatch
+the escalation funnel (:mod:`repro.solvers.registry`) reaches *after* the
+no-pivot twins fail their health screen: classical row-partial-pivoting
+LU, built in-house on ``fori_loop`` (no LAPACK — the repo's
+no-external-factorization rule), registered at the lowest dense priority
+so it can never win a default selection.
+
+It is O(n) sequential steps with a rank-1 update each — the paper's
+pre-blocking cost profile — which is exactly why it is a *fallback*: you
+pay the slow path only for operands the fast path provably mangles.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .solve import lu_solve
+
+__all__ = ["PivotedFactors", "pivoted_lu", "pivoted_solve", "pivoted_linear_solve"]
+
+
+class PivotedFactors(NamedTuple):
+    """Row-pivoted factorization ``P A = L U``: ``lu`` is the packed
+    (n, n) L\\U of the permuted operand, ``perm`` the int32 row permutation
+    (``(P A)[i] = A[perm[i]]``).  ``repro.kernels.ops.lu_solve`` recognises
+    the type and forces the ``pivoted`` solve backend, mirroring the
+    rank-k factor handling."""
+
+    lu: jax.Array
+    perm: jax.Array
+
+
+@jax.jit
+def pivoted_lu(a: jax.Array) -> PivotedFactors:
+    """Row-partial-pivoting LU of a dense (n, n) operand.
+
+    Each step swaps the max-|value| row of the active column into pivot
+    position before the rank-1 elimination — the textbook growth bound
+    (multipliers ≤ 1) the no-pivot contract gives up."""
+    n = a.shape[-1]
+    rows = jnp.arange(n)
+
+    def body(k, carry):
+        m, perm = carry
+        col = jnp.where(rows >= k, jnp.abs(m[:, k]), -jnp.inf)
+        p = jnp.argmax(col)
+        # swap rows k and p (gather/scatter with traced indices)
+        rk, rp = m[k], m[p]
+        m = m.at[k].set(rp).at[p].set(rk)
+        pk, pp = perm[k], perm[p]
+        perm = perm.at[k].set(pp).at[p].set(pk)
+        pivot = m[k, k]
+        l_col = jnp.where(rows > k, m[:, k] / pivot, 0.0)
+        u_row = jnp.where(rows > k, m[k], 0.0)
+        m = m - l_col[:, None] * u_row[None, :]
+        m = m.at[:, k].set(jnp.where(rows > k, l_col, m[:, k]))
+        return m, perm
+
+    m, perm = jax.lax.fori_loop(0, n, body, (a, rows.astype(jnp.int32)))
+    return PivotedFactors(lu=m, perm=perm)
+
+
+@jax.jit
+def pivoted_solve(factors: PivotedFactors, b: jax.Array) -> jax.Array:
+    """Substitution through row-pivoted factors: apply the row permutation
+    to the RHS, then the standard packed forward/backward sweeps."""
+    return lu_solve(factors.lu, b[factors.perm])
+
+
+def pivoted_linear_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    return pivoted_solve(pivoted_lu(a), b)

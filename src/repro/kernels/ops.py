@@ -50,6 +50,8 @@ import importlib
 import jax
 import jax.numpy as jnp
 
+from repro.core import health as _chealth
+from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
 
 __all__ = [
@@ -95,6 +97,28 @@ def _warn_fused_dtype_fallback(dtype) -> None:
         )
 
 
+def _screen(health):
+    """Normalize the ``health=`` kwarg: ``None``/``False`` → no screening,
+    ``True`` → default thresholds, a :class:`HealthThresholds` → itself."""
+    if health is None or health is False:
+        return None
+    return _chealth.DEFAULT_THRESHOLDS if health is True else health
+
+
+def _health_validator(thresholds, ref_max, bw: int = 0):
+    """Dispatch validator screening each candidate's factors — an unhealthy
+    result rejects the backend and feeds the registry's escalation funnel."""
+
+    def validate(problem, backend, result):
+        rec = _chealth.factor_health(result, ref_max=ref_max, bw=bw)
+        if not rec.verdict(thresholds):
+            return (f"unhealthy factor from {backend.name}: "
+                    f"{rec.report(thresholds)}", rec)
+        return None
+
+    return validate
+
+
 def _banded_auto_impl(n: int, bw: int, block: int | None, itemsize: int) -> str:
     """Historical banded auto rule (kept for callers/tests; the registry's
     static priorities encode the same threshold)."""
@@ -133,7 +157,7 @@ def _with_batch_rule(unbatched_fn, batched_fn):
 # dense LU
 # ---------------------------------------------------------------------------
 def _lu_2d(a: jax.Array, *, impl, block, col_tile, interpret, tolerance=0.0,
-           rank=None, oversample=8, rng_key=None) -> jax.Array:
+           rank=None, oversample=8, rng_key=None, validate=None) -> jax.Array:
     if impl in (None, "pallas_fused") and a.dtype != jnp.float32:
         # The fused kernel is fp32-only.  Fall back to its bitwise mirror
         # (as fast as fused at n=1024 per BENCH_kernels.json) rather than
@@ -144,16 +168,18 @@ def _lu_2d(a: jax.Array, *, impl, block, col_tile, interpret, tolerance=0.0,
         impl = "rand_lu"  # an explicit rank is a request for the rank-k tier
     problem = _sol().Problem.from_arrays("factor", a, tolerance=tolerance)
     return _sol().dispatch(
-        problem, a, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
+        problem, a, impl=impl, validate=validate,
+        block=block, col_tile=col_tile, interpret=interpret,
         rank=rank, oversample=oversample, rng_key=rng_key,
     )
 
 
-def _lu_batched(a: jax.Array, *, impl, block, interpret, tolerance=0.0) -> jax.Array:
+def _lu_batched(a: jax.Array, *, impl, block, interpret, tolerance=0.0,
+                validate=None) -> jax.Array:
     problem = _sol().Problem.from_arrays("factor", a, tolerance=tolerance)
     return _sol().dispatch(
         problem, a, impl=_batched_impl("factor", "dense", impl),
-        block=block, interpret=interpret,
+        validate=validate, block=block, interpret=interpret,
     )
 
 
@@ -171,6 +197,7 @@ def lu(
     rank: int | None = None,
     oversample: int = 8,
     rng_key=None,
+    health=None,
 ) -> jax.Array:
     """Packed EbV LU factorization (no pivoting — paper contract).
 
@@ -182,7 +209,23 @@ def lu(
     exact tier bitwise-identical to a tolerance-less call.  ``rank=`` routes
     to the randomized rank-k tier (``impl="rand_lu"``) and returns
     :class:`repro.core.randomized.RankKFactors` instead of a packed square
-    factor (``lu_solve`` recognises them)."""
+    factor (``lu_solve`` recognises them).
+
+    ``health=`` turns on post-factor screening: ``True`` (default
+    thresholds) or a :class:`repro.core.health.HealthThresholds` makes the
+    op return ``(factors, FactorHealth)``.  On eager auto dispatches the
+    screen also *validates*: a backend whose factors fail the verdict is
+    demoted and the registry escalates down the capable candidates (ending
+    at the partial-pivoting ``pivoted`` fallback for dense operands),
+    raising :class:`repro.solvers.SolveFailure` only when every candidate
+    fails.  ``health=None`` (the default) is bitwise-identical to the
+    pre-screening op."""
+    thresholds = _screen(health)
+    ref_max = jnp.max(jnp.abs(a)) if thresholds is not None else None
+
+    def _record(factors, bw=0):
+        return _chealth.factor_health(factors, ref_max=ref_max, bw=bw)
+
     if mesh is not None and mesh.shape[mesh_axis] > 1:
         if impl not in (None, "distributed"):
             raise ValueError(
@@ -192,26 +235,42 @@ def lu(
         problem = _sol().Problem.from_arrays(
             "factor", a, devices=mesh.shape[mesh_axis], tolerance=tolerance
         )
-        return _sol().dispatch(
+        packed = _sol().dispatch(
             problem, a, impl=impl, mesh=mesh, axis=mesh_axis,
             block=block, placement=placement, interpret=interpret,
         )
+        return packed if thresholds is None else (packed, _record(packed))
+    eager = not isinstance(a, jax.core.Tracer)
+    validate = (
+        _health_validator(thresholds, ref_max)
+        if thresholds is not None and eager else None
+    )
     if a.ndim >= 3:
         if rank is not None:
             raise ValueError("rank= (the randomized tier) supports 2-D operands only")
         lead, tail = a.shape[:-2], a.shape[-2:]
         out = _lu_batched(
             a.reshape((-1,) + tail), impl=impl, block=block, interpret=interpret,
-            tolerance=tolerance,
+            tolerance=tolerance, validate=validate,
         )
-        return out.reshape(lead + tail)
+        out = out.reshape(lead + tail)
+        return out if thresholds is None else (out, _record(out))
 
-    return _with_batch_rule(
+    if validate is not None:
+        # Screened eager call: go straight to the 2-D dispatch — the vmap
+        # wrapper traces its wrapped function, which would blind the
+        # validator (it only runs on concrete factors).
+        out = _lu_2d(a, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
+                     tolerance=tolerance, rank=rank, oversample=oversample,
+                     rng_key=rng_key, validate=validate)
+        return out, _record(out)
+    out = _with_batch_rule(
         lambda x: _lu_2d(x, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
                          tolerance=tolerance, rank=rank, oversample=oversample, rng_key=rng_key),
         lambda xs: _lu_batched(xs, impl=impl, block=block, interpret=interpret,
                                tolerance=tolerance),
     )(a)
+    return out if thresholds is None else (out, _record(out))
 
 
 # ---------------------------------------------------------------------------
@@ -249,6 +308,16 @@ def lu_solve(
     interpret: bool | None = None,
     tolerance: float = 0.0,
 ) -> jax.Array:
+    if isinstance(lu_packed, PivotedFactors):
+        # row-permuted factors from the partial-pivoting last resort — only
+        # the pivoted backend applies the permutation, so force it
+        problem = _sol().Problem(
+            op="solve", structure="dense", n=int(lu_packed.lu.shape[0]),
+            dtype=jnp.dtype(lu_packed.lu.dtype).name,
+            rhs=1 if b.ndim == 1 else int(b.shape[-1]),
+            tolerance=float(tolerance),
+        )
+        return _sol().dispatch(problem, lu_packed, b, impl="pivoted")
     if isinstance(lu_packed, RankKFactors):
         # rank-k factors from lu(rank=...) — only the randomized backend
         # can consume them, so this is a forced dispatch by construction
@@ -296,6 +365,7 @@ def linear_solve(
     rank: int | None = None,
     oversample: int = 8,
     rng_key=None,
+    verify_residual: bool = False,
     **kw,
 ) -> jax.Array:
     """Factor + solve.  ``impl`` routes BOTH phases: the factor phase gets it
@@ -313,7 +383,16 @@ def linear_solve(
     refinement — at ≥ 1e-6); with no admitted backend it composes the exact
     factor+solve as before.  ``rank=`` (or ``impl="rand_lu"``) forces the
     randomized rank-k tier.  ``tolerance=0.0`` (default) is
-    bitwise-identical to the pre-tolerance call."""
+    bitwise-identical to the pre-tolerance call.
+
+    ``verify_residual=True`` measures the relative residual ``|Ax-b|/|b|``
+    of every eager dispatch against the declared bound (``tolerance`` when
+    set, else ``repro.solvers.VERIFY_RESIDUAL_DEFAULT_BOUND``): fused-tier
+    dispatches that miss the bound feed the registry's escalation funnel,
+    and the composed exact path falls over to the partial-pivoting
+    ``pivoted`` backend once before raising
+    :class:`repro.solvers.SolveFailure`.  Off (the default) and under
+    tracing, behaviour is unchanged."""
     if mesh is not None and mesh.shape[mesh_axis] > 1:
         if kw.get("impl") not in (None, "distributed"):
             raise ValueError(
@@ -333,7 +412,10 @@ def linear_solve(
         impl = "rand_lu"
     if impl in _FUSED_LINEAR_IMPLS or (impl is None and tolerance > 0):
         bm = b[..., None] if b.ndim == a.ndim - 1 else b
-        problem = _sol().Problem.from_arrays("linear_solve", a, bm, tolerance=tolerance)
+        problem = _sol().Problem.from_arrays(
+            "linear_solve", a, bm, tolerance=tolerance,
+            verify_residual=verify_residual,
+        )
         if impl is not None or _sol().candidates(problem):
             squeeze = bm is not b
             x = _sol().dispatch(
@@ -351,27 +433,68 @@ def linear_solve(
         solve_impl = "xla" if kw["impl"] == "xla" else "pallas"
     if solve_impl is not None:
         solve_kw["impl"] = solve_impl
-    return lu_solve(lu(a, **lu_kw), b, **solve_kw)
+    x = lu_solve(lu(a, **lu_kw), b, **solve_kw)
+    if verify_residual and not isinstance(a, jax.core.Tracer) \
+            and not isinstance(b, jax.core.Tracer):
+        return _verify_composed(a, b, x, tolerance=tolerance)
+    return x
+
+
+def _verify_composed(a, b, x, *, tolerance: float, bw: int = 0):
+    """Post-hoc residual gate for the composed factor+solve path (the
+    check spans two dispatches, so the registry's in-dispatch validator
+    can't host it).  A miss escalates once to the partial-pivoting last
+    resort (dense only) before raising :class:`SolveFailure`."""
+    sol = _sol()
+    bound = tolerance if tolerance > 0 else sol.VERIFY_RESIDUAL_DEFAULT_BOUND
+    rel = float(_chealth.relative_residual(a, b, x, bw=bw))
+    if rel <= bound:  # NaN compares False and falls through to escalation
+        return x
+    problem = sol.Problem.from_arrays(
+        "linear_solve", a, b, bw=bw, tolerance=tolerance, verify_residual=True
+    )
+    reason = f"residual {rel:.3e} > bound {bound:.1e} from composed exact solve"
+    chain = [{"backend": "composed", "reason": reason}]
+    if bw == 0:
+        sol.registry._notify_escalation(problem, "composed", "pivoted", reason)
+        xp = lu_solve(lu(a, impl="pivoted"), b)
+        relp = float(_chealth.relative_residual(a, b, xp))
+        if relp <= bound:
+            return xp
+        chain.append({
+            "backend": "pivoted",
+            "reason": f"residual {relp:.3e} > bound {bound:.1e}",
+        })
+        sol.registry._notify_escalation(problem, "pivoted", None, chain[-1]["reason"])
+    else:
+        sol.registry._notify_escalation(problem, "composed", None, reason)
+    raise sol.SolveFailure(
+        "verified linear solve failed for "
+        f"{problem}: " + " -> ".join(f"{c['backend']} ({c['reason']})" for c in chain),
+        problem=problem, chain=chain,
+    )
 
 
 # ---------------------------------------------------------------------------
 # banded (row-aligned band, see repro.core.banded)
 # ---------------------------------------------------------------------------
-def _banded_lu_2d(arow, *, bw, impl, block, interpret, tolerance=0.0):
+def _banded_lu_2d(arow, *, bw, impl, block, interpret, tolerance=0.0, validate=None):
     problem = _sol().Problem.from_arrays("factor", arow, bw=bw, tolerance=tolerance)
     allow = None
     if impl == "pallas":  # old meaning: Pallas-only auto (6 MB VMEM rule)
         impl, allow = None, lambda be: be.name in ("pallas_blocked", "pallas_tiled")
     return _sol().dispatch(
-        problem, arow, impl=impl, allow=allow, bw=bw, block=block, interpret=interpret
+        problem, arow, impl=impl, allow=allow, validate=validate,
+        bw=bw, block=block, interpret=interpret,
     )
 
 
-def _banded_lu_batched(arow, *, bw, impl, block, interpret, tolerance=0.0):
+def _banded_lu_batched(arow, *, bw, impl, block, interpret, tolerance=0.0,
+                       validate=None):
     problem = _sol().Problem.from_arrays("factor", arow, bw=bw, tolerance=tolerance)
     return _sol().dispatch(
         problem, arow, impl=_batched_impl("factor", "banded", impl),
-        bw=bw, block=block, interpret=interpret,
+        validate=validate, bw=bw, block=block, interpret=interpret,
     )
 
 
@@ -383,23 +506,48 @@ def banded_lu(
     block: int | None = None,
     interpret: bool | None = None,
     tolerance: float = 0.0,
+    health=None,
 ) -> jax.Array:
     """Packed band LU on the row-aligned band (no pivoting).  ``tolerance``
     keys selection/cache like the dense ops (no approximate banded tier
-    exists yet, so it only partitions cache rows)."""
+    exists yet, so it only partitions cache rows).  ``health=`` (``True``
+    or a :class:`HealthThresholds`) returns ``(factors, FactorHealth)`` and
+    screens eager auto dispatches exactly like :func:`lu` — the band has no
+    pivoted last resort, so an unhealthy band factor escalates through the
+    remaining band backends and then fails structurally."""
+    thresholds = _screen(health)
+    ref_max = jnp.max(jnp.abs(arow)) if thresholds is not None else None
+
+    def _record(factors):
+        return _chealth.factor_health(factors, ref_max=ref_max, bw=bw)
+
+    eager = not isinstance(arow, jax.core.Tracer)
+    validate = (
+        _health_validator(thresholds, ref_max, bw=bw)
+        if thresholds is not None and eager else None
+    )
     if arow.ndim >= 3:
         lead, tail = arow.shape[:-2], arow.shape[-2:]
         out = _banded_lu_batched(
             arow.reshape((-1,) + tail), bw=bw, impl=impl, block=block,
-            interpret=interpret, tolerance=tolerance,
+            interpret=interpret, tolerance=tolerance, validate=validate,
         )
-        return out.reshape(lead + out.shape[1:])
-    return _with_batch_rule(
+        out = out.reshape(lead + out.shape[1:])
+        return out if thresholds is None else (out, _record(out))
+    if validate is not None:
+        # screened eager call: skip the vmap wrapper (it traces, which
+        # would blind the validator) and dispatch the 2-D band directly
+        out = _banded_lu_2d(arow, bw=bw, impl=impl, block=block,
+                            interpret=interpret, tolerance=tolerance,
+                            validate=validate)
+        return out, _record(out)
+    out = _with_batch_rule(
         lambda x: _banded_lu_2d(x, bw=bw, impl=impl, block=block, interpret=interpret,
                                 tolerance=tolerance),
         lambda xs: _banded_lu_batched(xs, bw=bw, impl=impl, block=block,
                                       interpret=interpret, tolerance=tolerance),
     )(arow)
+    return out if thresholds is None else (out, _record(out))
 
 
 def _banded_solve_2d(lu_band, b, *, bw, impl, block, rhs_tile, interpret, tolerance=0.0):
@@ -472,16 +620,24 @@ def banded_linear_solve(
     rhs_tile: int = 256,
     interpret: bool | None = None,
     tolerance: float = 0.0,
+    verify_residual: bool = False,
 ) -> jax.Array:
     """Banded factor + solve with ``impl`` routed to BOTH phases (the same
     contract :func:`linear_solve` honours): ``"xla*"`` factor impls solve
     through the matching jnp path, Pallas factor impls solve through the
-    blocked solve kernel.  ``solve_impl`` overrides the solve phase."""
+    blocked solve kernel.  ``solve_impl`` overrides the solve phase.
+    ``verify_residual=True`` gates eager results on the relative residual
+    like :func:`linear_solve` (there is no banded pivoted fallback, so a
+    miss raises :class:`repro.solvers.SolveFailure` directly)."""
     if solve_impl is None and impl is not None:
         solve_impl = impl if impl in ("xla", "xla_scalar") else "pallas"
     lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret,
                     tolerance=tolerance)
-    return banded_solve(
+    x = banded_solve(
         lub, b, bw=bw, impl=solve_impl, block=block, rhs_tile=rhs_tile,
         interpret=interpret, tolerance=tolerance,
     )
+    if verify_residual and not isinstance(arow, jax.core.Tracer) \
+            and not isinstance(b, jax.core.Tracer):
+        return _verify_composed(arow, b, x, tolerance=tolerance, bw=bw)
+    return x

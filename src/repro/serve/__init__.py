@@ -8,4 +8,9 @@
 """
 from .engine import Engine, EngineStats, GenRequest  # noqa: F401
 from .scheduler import Scheduler, bucket_length  # noqa: F401
-from .solve_service import SolveService  # noqa: F401
+from .solve_service import (  # noqa: F401
+    DeadlineMiss,
+    NotFlushed,
+    SolveService,
+    UnknownTicket,
+)

@@ -40,6 +40,20 @@ instead — unmeasured shapes keep full coalescing.
 Admission/ordering rides the shared :class:`repro.serve.scheduler.Scheduler`
 (buckets = ``(structure, n, bw, dtype, tolerance)``; deadline/FIFO order
 decides which matrix group flushes first).
+
+**Failure isolation.**  Factorizations are health-screened by default
+(``ops.lu(..., health=)`` → the registry escalation funnel), so a hostile
+operand escalates through the capable backends and — only when every one
+fails — surfaces as a structured :class:`repro.solvers.SolveFailure`.  The
+service degrades instead of dying: the failing coalesced group's tickets
+resolve to the failure *value* (other groups in the same flush are
+untouched), the unhealthy factors are never admitted to the LRU, and the
+fingerprint enters a **negative cache** (quarantine) for the next
+``quarantine_ttl`` flushes — repeat offenders short-circuit without
+re-dispatching.  A ``clock=`` makes deadlines real: requests already past
+deadline at drain are shed as :class:`DeadlineMiss` values rather than
+burning a dispatch.  ``flush`` is transactional — an unexpected exception
+mid-flush requeues every unprocessed entry with seq/deadline intact.
 """
 from __future__ import annotations
 
@@ -52,14 +66,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import solvers
+from repro.core import health as _health
 from repro.core import refine as _refine
+from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
 from repro.core.solve import split_rhs, stack_rhs
 from repro.kernels import ops as kops
 from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
 from .scheduler import Scheduler
 
-__all__ = ["SolveRequest", "SolveServiceStats", "SolveService", "fingerprint"]
+__all__ = [
+    "SolveRequest",
+    "SolveServiceStats",
+    "SolveService",
+    "fingerprint",
+    "DeadlineMiss",
+    "UnknownTicket",
+    "NotFlushed",
+]
+
+
+class UnknownTicket(KeyError):
+    """The ticket was never issued, or its result was already redeemed."""
+
+
+class NotFlushed(KeyError):
+    """The ticket is still queued — call :meth:`SolveService.flush` first."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineMiss:
+    """Result value for a request already past its deadline at drain time:
+    the service sheds it instead of burning a dispatch on a stale answer."""
+
+    ticket: int
+    deadline: float
+    now: float
 
 
 def fingerprint(a, *, bw: int = 0) -> str:
@@ -96,6 +138,10 @@ class SolveServiceStats:
     solved_columns: int = 0
     approx_solves: int = 0  # dispatches served by a residual-bound (approximate) tier
     width_capped_dispatches: int = 0  # extra dispatches forced by the coalescing cap
+    failed_requests: int = 0  # tickets resolved to a structured SolveFailure
+    escalations: int = 0  # registry escalation events observed during flushes
+    quarantined: int = 0  # tickets short-circuited by the negative cache
+    shed_deadline: int = 0  # tickets shed as DeadlineMiss at drain
     last_refine_iterations: int | None = None  # refinement sweeps of the last
                                                # approximate solve (None = none ran)
 
@@ -115,14 +161,39 @@ class SolveService:
     submit+flush convenience for a single request.
     """
 
-    def __init__(self, *, cache_entries: int = 16):
+    def __init__(
+        self,
+        *,
+        cache_entries: int = 16,
+        health=True,
+        quarantine_ttl: int = 8,
+        clock=None,
+        verify_residual: bool = False,
+    ):
+        """``health=`` screens every factorization (``True`` = default
+        thresholds, a :class:`repro.core.health.HealthThresholds` to tune,
+        ``None``/``False`` to disable — restoring the unscreened ops).
+        ``quarantine_ttl`` is how many subsequent flushes a
+        terminally-failed fingerprint short-circuits for.  ``clock``
+        (e.g. ``time.monotonic``) arms deadline shedding; without one,
+        deadlines only order the flush (the historical behaviour).
+        ``verify_residual=True`` additionally gates every coalesced solve
+        on its measured relative residual."""
         self.cache_entries = cache_entries
+        self.health = health
+        self.quarantine_ttl = quarantine_ttl
+        self.verify_residual = verify_residual
+        self._clock = clock
         # fp -> {accuracy tier -> factors}; tier 0.0 = exact packed factors,
         # tier t > 0 = approximate factors guaranteeing relative residual t.
         # LRU order (and the entry budget) is per fingerprint.
         self._lru: OrderedDict[str, dict[float, object]] = OrderedDict()
+        # negative cache: fp -> (expiry flush count, the SolveFailure)
+        self._quarantine: dict[str, tuple[int, object]] = {}
+        self._flush_count = 0
         self._sched = Scheduler()
         self._tickets = 0
+        self._pending_tickets: set[int] = set()
         self._done: dict[int, object] = {}  # flushed, not yet redeemed
         self.stats = SolveServiceStats()
 
@@ -171,10 +242,15 @@ class SolveService:
             cost=float(cols), deadline=deadline, real=cols,
         )
         self.stats.requests += 1
+        self._pending_tickets.add(ticket)
         return ticket
 
     def pending(self) -> int:
         return len(self._sched)
+
+    def quarantined_fingerprints(self) -> set[str]:
+        """Fingerprints currently in the negative cache (diagnostics)."""
+        return set(self._quarantine)
 
     # -- factorization cache ------------------------------------------------
     @staticmethod
@@ -195,12 +271,21 @@ class SolveService:
                 self._lru.move_to_end(req.fp)
                 return tiers[min(eligible)]
         self.stats.cache_misses += 1
+        # With health screening on, a SolveFailure propagates out of these
+        # ops before anything reaches the LRU — unhealthy factors are never
+        # admitted (success past the screen *is* the admission check).
         if req.bw:
-            factors = kops.banded_lu(req.a, bw=req.bw, tolerance=tolerance)
+            factors = kops.banded_lu(
+                req.a, bw=req.bw, tolerance=tolerance, health=self.health
+            )
         elif req.rank is not None:
-            factors = kops.lu(req.a, rank=req.rank, tolerance=tolerance)
+            factors = kops.lu(
+                req.a, rank=req.rank, tolerance=tolerance, health=self.health
+            )
         else:
-            factors = kops.lu(req.a, tolerance=tolerance)
+            factors = kops.lu(req.a, tolerance=tolerance, health=self.health)
+        if self.health:
+            factors, _record = factors  # screened ops return (factors, health)
         self._lru.setdefault(req.fp, {})[self._factor_tier(factors)] = factors
         self._lru.move_to_end(req.fp)
         while len(self._lru) > self.cache_entries:
@@ -210,50 +295,117 @@ class SolveService:
 
     # -- the flush ----------------------------------------------------------
     def flush(self) -> dict[int, object]:
-        """Serve every pending request; returns ``{ticket: x}`` for the
+        """Serve every pending request; returns ``{ticket: result}`` for the
         whole drained queue.  Results are also retained until redeemed via
         :meth:`result`, so a convenience :meth:`solve` draining the queue
-        cannot lose earlier submissions' answers."""
+        cannot lose earlier submissions' answers.
+
+        A result is a solution array, a :class:`repro.solvers.SolveFailure`
+        (the request's coalesced group exhausted the escalation funnel, or
+        its fingerprint is quarantined), or a :class:`DeadlineMiss` (shed at
+        drain — only when the service was built with a ``clock``).  One
+        group failing never disturbs the other groups in the flush."""
         counting = solvers.add_dispatch_hook(self._count_dispatch)
+        escalating = solvers.add_escalation_hook(self._count_escalation)
+        self._flush_count += 1
+        for fp in [f for f, (exp, _) in self._quarantine.items()
+                   if exp < self._flush_count]:
+            del self._quarantine[fp]
         drained = self._sched.drain()
         processed: set[int] = set()  # seq of every entry whose group completed
+        results: dict[int, object] = {}
         try:
-            results: dict[int, object] = {}
-            groups: OrderedDict[tuple, list] = OrderedDict()
+            now = self._clock() if self._clock is not None else None
+            live = []
             for entry in drained:
+                r = entry.payload
+                if now is not None and r.deadline is not None and r.deadline < now:
+                    results[r.ticket] = DeadlineMiss(
+                        ticket=r.ticket, deadline=r.deadline, now=now
+                    )
+                    self.stats.shed_deadline += 1
+                    processed.add(entry.seq)
+                else:
+                    live.append(entry)
+            groups: OrderedDict[tuple, list] = OrderedDict()
+            for entry in live:
                 p = entry.payload
                 # rank-tier requests coalesce separately from exact requests
                 # against the same matrix — they want different factors.
                 groups.setdefault((p.fp, p.rank), []).append(entry)
             for (fp, rank), entries in groups.items():
                 reqs = [e.payload for e in entries]
+                quarantined = self._quarantine.get(fp)
+                if quarantined is not None:
+                    # negative cache: this operand already exhausted the
+                    # funnel recently — short-circuit without dispatching.
+                    for r in reqs:
+                        results[r.ticket] = quarantined[1]
+                    self.stats.quarantined += len(reqs)
+                    processed.update(e.seq for e in entries)
+                    continue
                 # tightest member tolerance governs the whole coalesced
                 # dispatch: every member accepts its residual.
                 group_tol = min(r.tolerance for r in reqs)
-                factors = self._factors_for(reqs[0], group_tol)
-                # hit/miss accounting is per REQUEST: coalesced group members
-                # past the leader are served without a factorization too
-                self.stats.cache_hits += len(reqs) - 1
-                stacked, widths, squeezes = stack_rhs([r.b for r in reqs])
-                self.stats.solved_columns += int(stacked.shape[-1])
-                if len(reqs) > 1:
-                    self.stats.coalesced_requests += len(reqs)
-                x = self._dispatch_solve(reqs[0], factors, stacked, group_tol)
+                try:
+                    factors = self._factors_for(reqs[0], group_tol)
+                    # hit/miss accounting is per REQUEST: coalesced group
+                    # members past the leader skip the factorization too
+                    self.stats.cache_hits += len(reqs) - 1
+                    stacked, widths, squeezes = stack_rhs([r.b for r in reqs])
+                    self.stats.solved_columns += int(stacked.shape[-1])
+                    if len(reqs) > 1:
+                        self.stats.coalesced_requests += len(reqs)
+                    x = self._dispatch_solve(reqs[0], factors, stacked, group_tol)
+                    if self.verify_residual:
+                        self._check_residual(reqs[0], stacked, x, group_tol)
+                except solvers.SolveFailure as failure:
+                    # graceful degradation: the whole group resolves to the
+                    # structured failure VALUE (never NaN answers, never an
+                    # exception that would abort the other groups), and the
+                    # fingerprint enters the negative cache.
+                    for r in reqs:
+                        results[r.ticket] = failure
+                    self.stats.failed_requests += len(reqs)
+                    self._quarantine[fp] = (
+                        self._flush_count + self.quarantine_ttl, failure
+                    )
+                    processed.update(e.seq for e in entries)
+                    continue
                 for r, xr in zip(reqs, split_rhs(x, widths, squeezes)):
                     results[r.ticket] = xr
                 processed.update(e.seq for e in entries)
             return results
         finally:
             solvers.remove_dispatch_hook(counting)
+            solvers.remove_escalation_hook(escalating)
             # commit every completed group's answers even when a later group
             # raised: callers redeem them via result().
             self._done.update(results)
+            self._pending_tickets.difference_update(results)
             # transactional drain: an exception mid-flush must not lose the
             # rest of the batch — unprocessed entries go back to the queue
             # with their original seq/deadline intact.
             remaining = [e for e in drained if e.seq not in processed]
             if remaining:
                 self._sched.restore(remaining)
+
+    def _check_residual(self, req: SolveRequest, stacked, x, tolerance: float) -> None:
+        """``verify_residual`` gate on the coalesced answer; a miss raises
+        :class:`SolveFailure` into the group's failure handling."""
+        bound = tolerance if tolerance > 0 else solvers.VERIFY_RESIDUAL_DEFAULT_BOUND
+        rel = float(_health.relative_residual(req.a, stacked, x, bw=req.bw))
+        if not rel <= bound:  # NaN-safe
+            problem = solvers.Problem.from_arrays(
+                "linear_solve", req.a, stacked, bw=req.bw,
+                tolerance=tolerance, verify_residual=True,
+            )
+            raise solvers.SolveFailure(
+                f"coalesced solve residual {rel:.3e} > bound {bound:.1e} "
+                f"for {problem}",
+                problem=problem,
+                chain=[{"backend": "serve", "reason": f"residual {rel:.3e}"}],
+            )
 
     def _dispatch_solve(self, req: SolveRequest, factors, stacked, tolerance: float):
         """One coalesced substitution — chunked at the autotuned coalescing
@@ -265,9 +417,11 @@ class SolveService:
 
         width = int(stacked.shape[-1])
         cap = None
-        if not isinstance(factors, RankKFactors):
+        if not isinstance(factors, (RankKFactors, PivotedFactors)):
             # width measurements only exist for packed-factor substitution;
-            # rank-k solves are GEMM-shaped and always coalesce fully.
+            # rank-k solves are GEMM-shaped and always coalesce fully, and
+            # pivoted factors (the escalation last resort) are too rare to
+            # have measured widths.
             problem = solvers.Problem.from_arrays(
                 "solve", factors, stacked, bw=req.bw, tolerance=tolerance
             )
@@ -291,17 +445,31 @@ class SolveService:
         return x
 
     def result(self, ticket: int):
-        """Redeem (pop) a flushed ticket; raises KeyError if the ticket was
-        never flushed or was already redeemed."""
-        return self._done.pop(ticket)
+        """Redeem (pop) a flushed ticket.  Raises :class:`NotFlushed` when
+        the ticket is still queued and :class:`UnknownTicket` when it was
+        never issued or was already redeemed (both subclass ``KeyError``)."""
+        try:
+            return self._done.pop(ticket)
+        except KeyError:
+            pass
+        if ticket in self._pending_tickets:
+            raise NotFlushed(
+                f"ticket {ticket} has not been flushed yet (call flush())"
+            )
+        raise UnknownTicket(f"ticket {ticket} was never issued or already redeemed")
 
     def solve(self, a, b, *, bw: int = 0, tolerance: float = 0.0, rank: int | None = None):
         """submit + flush for one request (still hits/extends the cache).
         Other pending requests flushed alongside stay redeemable via
-        :meth:`result`."""
+        :meth:`result`.  A request that terminally failed raises its
+        :class:`SolveFailure` (batch callers using submit/flush/result get
+        it as a value instead)."""
         ticket = self.submit(a, b, bw=bw, tolerance=tolerance, rank=rank)
         self.flush()
-        return self.result(ticket)
+        out = self.result(ticket)
+        if isinstance(out, solvers.SolveFailure):
+            raise out
+        return out
 
     def _count_dispatch(self, problem, backend) -> None:
         if problem.op == "factor":
@@ -310,3 +478,6 @@ class SolveService:
             self.stats.solve_dispatches += 1
             if getattr(backend, "residual_bound", None) is not None:
                 self.stats.approx_solves += 1
+
+    def _count_escalation(self, problem, failed, nxt, reason) -> None:
+        self.stats.escalations += 1

@@ -18,17 +18,26 @@ Public ops in :mod:`repro.kernels.ops` are a thin compatibility shim over
 from .problem import Problem, OPS, STRUCTURES
 from .registry import (
     Backend,
+    DEMOTION_TTL,
+    VERIFY_RESIDUAL_DEFAULT_BOUND,
+    SolveFailure,
     add_dispatch_hook,
+    add_escalation_hook,
     backends_for,
     candidates,
+    clear_demotions,
+    demotions,
     dispatch,
     get_backend,
     record_dispatches,
+    record_escalations,
     register,
     remove_dispatch_hook,
+    remove_escalation_hook,
     select,
 )
 from .cache import AutotuneCache, get_cache, cache_path, invalidate
+from .faults import FaultPlan, InjectedFault, inject
 from . import backends as _backends  # noqa: F401  (side effect: registration)
 
 __all__ = [
@@ -36,6 +45,7 @@ __all__ = [
     "Backend",
     "OPS",
     "STRUCTURES",
+    "SolveFailure",
     "register",
     "backends_for",
     "candidates",
@@ -45,6 +55,16 @@ __all__ = [
     "add_dispatch_hook",
     "remove_dispatch_hook",
     "record_dispatches",
+    "add_escalation_hook",
+    "remove_escalation_hook",
+    "record_escalations",
+    "demotions",
+    "clear_demotions",
+    "DEMOTION_TTL",
+    "VERIFY_RESIDUAL_DEFAULT_BOUND",
+    "FaultPlan",
+    "InjectedFault",
+    "inject",
     "AutotuneCache",
     "get_cache",
     "cache_path",

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.core import banded as _core_banded
 from repro.core import blocked as _core_blocked
+from repro.core import pivoted as _core_pivoted
 from repro.core import randomized as _core_rand
 from repro.core import refine as _core_refine
 from repro.core import solve as _core_solve
@@ -213,6 +214,17 @@ register(Backend(
     priority=lambda p: 10.0,
     autotune=False,  # needs a mesh; not shootable by the single-host harness
 ))
+register(Backend(
+    name="pivoted", op="factor", structure="dense",
+    # last-resort fallback for operands outside the no-pivot class: the
+    # escalation funnel reaches it after every no-pivot twin fails its
+    # health screen.  Lowest priority so it can never win a default
+    # selection; O(n) sequential rank-1 steps, so it must not.
+    call=lambda p, a, **_: _core_pivoted.pivoted_lu(a),
+    supports=_local,
+    priority=lambda p: 0.05,
+    autotune=False,  # different factor layout (PivotedFactors, not packed)
+))
 
 # ---------------------------------------------------------------------------
 # dense solve
@@ -237,6 +249,16 @@ register(Backend(
     call=lambda p, lu, b, **_: _lu_solve_j(lu, b),
     supports=_local,
     priority=lambda p: 0.5,
+))
+register(Backend(
+    name="pivoted", op="solve", structure="dense",
+    # consumes PivotedFactors (row permutation applied to the RHS before
+    # substitution) — never auto-selected; repro.kernels.ops.lu_solve
+    # forces it when handed pivoted factors, like the rank-k pattern.
+    call=lambda p, factors, b, **_: _core_pivoted.pivoted_solve(factors, b),
+    supports=lambda p: False,
+    priority=lambda p: 0.0,
+    autotune=False,
 ))
 
 # ---------------------------------------------------------------------------

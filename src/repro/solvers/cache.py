@@ -29,6 +29,7 @@ import json
 import math
 import os
 import tempfile
+import warnings
 
 from .problem import Problem
 
@@ -86,8 +87,20 @@ class AutotuneCache:
                 e.setdefault("tolerance", 0.0)  # pre-tolerance caches = exact rows
                 if all(f in e for f in _KEY_FIELDS) and isinstance(e.get("times_us"), dict):
                     entries.append(e)
-        except (OSError, ValueError):
-            pass  # missing or corrupt cache == empty cache
+        except FileNotFoundError:
+            pass  # no cache yet == empty cache
+        except (OSError, ValueError, AttributeError, TypeError, KeyError) as err:
+            # truncated write, hand-edited file, or a JSON document of the
+            # wrong shape: warn (a silently-vanished cache looks like a perf
+            # regression) and start empty — static priorities take over until
+            # fresh measurements land.
+            warnings.warn(
+                f"autotune cache {path!r} is unreadable "
+                f"({type(err).__name__}: {err}); starting with an empty cache",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            entries = []
         return cls(path=path, entries=entries)
 
     def save(self, path: str | None = None) -> str:

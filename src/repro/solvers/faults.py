@@ -1,0 +1,135 @@
+"""Deterministic fault injection at the registry dispatch boundary.
+
+Proving that the failure-isolating pipeline actually isolates — a poisoned
+coalesced group resolving to structured failures while its flush-mates
+stay bitwise-correct — requires *deterministic* faults: hand-crafting a
+matrix that breaks exactly one backend at exactly one dispatch is fragile
+and couples tests to kernel numerics.  Instead, tests and
+``benchmarks/serve_bench.py --chaos`` push a :class:`FaultPlan` onto a
+stack the registry consults at every dispatch attempt:
+
+    with faults.inject(nan_pivot_at=0, match=lambda p: p.n == 96):
+        ops.lu(a, health=True)     # factors come back pivot-poisoned
+
+Three fault kinds, composable in one plan:
+
+* ``backend_raises`` — the matched backend raises :class:`InjectedFault`
+  *instead of running* (models a kernel crash / compile failure); the
+  funnel escalates past it.
+* ``nan_pivot_at=i`` — the matched backend runs, then pivot ``i`` of its
+  packed factor result is overwritten with NaN (models silent no-pivot
+  blow-up); only health screening can catch it.
+* ``slow_dispatch_us`` — a host-side sleep before the backend runs
+  (models a straggler; lets deadline shedding be tested without real load).
+
+Plans are matched by ``op``/``backend``/``match(problem)`` and optionally
+budgeted (``times=``); every application is appended to ``plan.applied``
+so tests assert exactly what fired.  Leaving the ``inject`` context
+clears the registry's demotion table — faults must not leak selection
+state into subsequent healthy traffic (the bitwise-default contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["InjectedFault", "FaultPlan", "inject", "active_plans"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by a ``backend_raises`` plan in place of running the backend."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One active fault description (see module docstring).
+
+    ``match``/``backend``/``op`` restrict which dispatch attempts the plan
+    applies to (all ``None`` = every attempt); ``times`` caps total
+    applications across the plan's lifetime (``None`` = unlimited).
+    """
+
+    nan_pivot_at: int | None = None
+    backend_raises: bool = False
+    slow_dispatch_us: float = 0.0
+    match: Callable | None = None  # problem predicate
+    backend: str | None = None     # backend-name restriction
+    op: str | None = None          # op restriction ("factor", "solve", ...)
+    times: int | None = None
+    applied: list = dataclasses.field(default_factory=list)
+
+    def matches(self, problem, backend_name: str) -> bool:
+        if self.times is not None and len(self.applied) >= self.times:
+            return False
+        if self.op is not None and problem.op != self.op:
+            return False
+        if self.backend is not None and backend_name != self.backend:
+            return False
+        if self.match is not None and not self.match(problem):
+            return False
+        return True
+
+    def _note(self, problem, backend_name: str, kind: str) -> None:
+        self.applied.append((problem, backend_name, kind))
+
+    # -- the two registry touch points --------------------------------------
+    def before_call(self, problem, backend_name: str) -> None:
+        """Pre-call faults: straggler sleep, then injected crash."""
+        if self.slow_dispatch_us:
+            self._note(problem, backend_name, "slow_dispatch")
+            time.sleep(self.slow_dispatch_us / 1e6)
+        if self.backend_raises:
+            self._note(problem, backend_name, "backend_raises")
+            raise InjectedFault(
+                f"injected fault: backend {backend_name!r} raised for {problem}"
+            )
+
+    def after_call(self, problem, backend_name: str, result):
+        """Post-call faults: poison pivot ``nan_pivot_at`` of a packed
+        factor result (dense diagonal or band pivot column)."""
+        if self.nan_pivot_at is None or problem.op != "factor":
+            return result
+        i = int(self.nan_pivot_at)
+        if not hasattr(result, "at"):  # factor records (rank-k, pivoted):
+            return result              # poisoning targets packed arrays only
+        self._note(problem, backend_name, "nan_pivot")
+        nan = jnp.asarray(float("nan"), result.dtype)
+        if problem.banded:
+            return result.at[..., i, problem.bw].set(nan)
+        return result.at[..., i, i].set(nan)
+
+
+_ACTIVE: list[FaultPlan] = []
+
+
+def active_plans() -> list[FaultPlan]:
+    """The currently-injected plans (outermost first).  Consulted by
+    :func:`repro.solvers.registry.dispatch` on every attempt."""
+    return list(_ACTIVE)
+
+
+class inject:
+    """Context manager arming one :class:`FaultPlan` (kwargs are the plan
+    fields).  Yields the plan so tests can assert ``plan.applied``.  On
+    exit the plan is disarmed and the registry's demotion table is cleared
+    (injected failures must not steer later healthy selections)."""
+
+    def __init__(self, **kwargs):
+        self.plan = FaultPlan(**kwargs)
+
+    def __enter__(self) -> FaultPlan:
+        _ACTIVE.append(self.plan)
+        return self.plan
+
+    def __exit__(self, *exc):
+        try:
+            _ACTIVE.remove(self.plan)
+        except ValueError:
+            pass
+        from . import registry
+
+        registry.clear_demotions()
+        return False

@@ -32,6 +32,12 @@ class Problem:
                  0.0 (the default) demands the exact tier, so approximate
                  backends (which declare a ``residual_bound``) are only
                  admitted when the caller states a tolerance they meet.
+    ``verify_residual`` ask the registry to *measure* the relative residual
+                 of eager ``linear_solve`` dispatches and treat a result
+                 past the bound (``tolerance`` when set, else the exact-tier
+                 default in ``registry.VERIFY_RESIDUAL_DEFAULT_BOUND``) as a
+                 dispatch failure — feeding the escalation funnel instead of
+                 returning a silently-wrong answer.
     """
 
     op: str
@@ -43,6 +49,7 @@ class Problem:
     rhs: int = 0
     devices: int = 1
     tolerance: float = 0.0
+    verify_residual: bool = False
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -64,7 +71,8 @@ class Problem:
 
     @classmethod
     def from_arrays(
-        cls, op: str, a, b=None, *, bw: int = 0, devices: int = 1, tolerance: float = 0.0
+        cls, op: str, a, b=None, *, bw: int = 0, devices: int = 1,
+        tolerance: float = 0.0, verify_residual: bool = False,
     ) -> "Problem":
         """Build a descriptor from the operand arrays.
 
@@ -101,4 +109,5 @@ class Problem:
             rhs=rhs,
             devices=int(devices),
             tolerance=float(tolerance),
+            verify_residual=bool(verify_residual),
         )

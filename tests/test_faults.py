@@ -1,0 +1,340 @@
+"""Fault injection, the escalation funnel, and serve-layer degradation.
+
+The headline test is the end-to-end isolation proof: one poisoned
+coalesced group among several in a single flush resolves to structured
+:class:`SolveFailure` values while every healthy ticket's answer stays
+bitwise-unchanged, the unhealthy factors never enter the LRU, and a
+subsequent identical healthy run escalates zero times (asserted through
+the registry's own hooks, never self-reporting).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.core import make_diagonally_dominant, relative_residual
+from repro.core.pivoted import PivotedFactors
+from repro.kernels import ops as kops
+from repro.serve import DeadlineMiss, NotFlushed, SolveService, UnknownTicket
+from repro.serve.solve_service import fingerprint
+
+
+@pytest.fixture(autouse=True)
+def _clean_demotions():
+    solvers.clear_demotions()
+    yield
+    solvers.clear_demotions()
+
+
+def dd(n, seed=0):
+    return make_diagonally_dominant(jax.random.PRNGKey(seed), n)
+
+
+def rhs(n, seed=100):
+    return jax.random.normal(jax.random.PRNGKey(seed), (n,))
+
+
+# ---------------------------------------------------------------------------
+# fault-plan mechanics
+# ---------------------------------------------------------------------------
+def test_plan_matching_and_budget():
+    plan = solvers.FaultPlan(backend_raises=True, op="factor",
+                             backend="pallas_fused", times=1)
+    p_factor = solvers.Problem(op="factor", structure="dense", n=8)
+    p_solve = solvers.Problem(op="solve", structure="dense", n=8, rhs=1)
+    assert plan.matches(p_factor, "pallas_fused")
+    assert not plan.matches(p_solve, "pallas_fused")
+    assert not plan.matches(p_factor, "xla")
+    with pytest.raises(solvers.InjectedFault):
+        plan.before_call(p_factor, "pallas_fused")
+    assert not plan.matches(p_factor, "pallas_fused")  # budget spent
+
+
+def test_nan_pivot_poisons_dense_and_banded_factors():
+    plan = solvers.FaultPlan(nan_pivot_at=2)
+    p = solvers.Problem(op="factor", structure="dense", n=4)
+    out = plan.after_call(p, "xla", jnp.ones((4, 4)))
+    assert bool(jnp.isnan(out[2, 2])) and int(jnp.isnan(out).sum()) == 1
+    pb = solvers.Problem(op="factor", structure="banded", n=6, bw=1)
+    outb = plan.after_call(pb, "xla", jnp.ones((6, 3)))
+    assert bool(jnp.isnan(outb[2, 1]))
+    # solve results and non-array factor records pass through untouched
+    assert plan.after_call(p, "xla", PivotedFactors(jnp.ones((2, 2)), jnp.arange(2))) is not None
+
+
+def test_inject_is_scoped_and_clears_demotions():
+    a = dd(48, 1)
+    with solvers.inject(backend_raises=True, backend="pallas_fused", op="factor"):
+        f = kops.lu(a)
+        assert solvers.demotions()  # the injected crash demoted the winner
+    assert not solvers.demotions()  # exit wiped the table
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(kops.lu(a, impl="xla")))
+    # outside the context the default winner is back, bitwise
+    with solvers.record_dispatches() as log:
+        f2 = kops.lu(a)
+    assert log[0][1] == "pallas_fused"
+    np.testing.assert_array_equal(
+        np.asarray(f2), np.asarray(kops.lu(a, impl="pallas_fused"))
+    )
+
+
+# ---------------------------------------------------------------------------
+# escalation funnel
+# ---------------------------------------------------------------------------
+def test_escalation_chain_and_hooks():
+    a = dd(48, 2)
+    with solvers.inject(backend_raises=True, backend="pallas_fused", op="factor"):
+        with solvers.record_escalations() as esc:
+            f = kops.lu(a)
+    assert [(e[1], e[2]) for e in esc] == [("pallas_fused", "xla")]
+    assert "InjectedFault" in esc[0][3]
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(kops.lu(a, impl="xla")))
+
+
+def test_all_backends_fail_raises_structured_solve_failure():
+    a = dd(48, 3)
+    with solvers.inject(backend_raises=True, op="factor"):
+        with pytest.raises(solvers.SolveFailure) as ei:
+            kops.lu(a, health=True)
+    failure = ei.value
+    assert failure.problem.op == "factor"
+    assert len(failure.chain) >= 2  # every capable backend appears once
+    assert all("InjectedFault" in c["reason"] for c in failure.chain)
+
+
+def test_forced_impl_validation_failure_raises_not_escalates():
+    a = dd(48, 4).at[0, 0].set(0.0)
+    with solvers.record_escalations() as esc:
+        with pytest.raises(solvers.SolveFailure) as ei:
+            kops.lu(a, impl="xla", health=True)
+    assert not esc  # forced impl has no escalation target
+    assert ei.value.chain[0]["backend"] == "xla"
+    assert ei.value.health is not None and not ei.value.health.verdict()
+
+
+def test_health_escalation_reaches_pivoted_last_resort():
+    n = 64
+    a = dd(n, 5).at[0, 0].set(0.0)  # singular for no-pivot LU, fine with pivoting
+    b = rhs(n)
+    with solvers.record_escalations() as esc:
+        f, rec = kops.lu(a, health=True)
+    assert isinstance(f, PivotedFactors) and rec.verdict()
+    assert esc and esc[-1][2] == "pivoted"
+    x = kops.lu_solve(f, b)
+    assert float(relative_residual(a, b, x)) < 1e-4
+
+
+def test_demotion_never_reroutes_default_traffic():
+    n = 72
+    a = dd(n, 6)
+    bad = a.at[0, 0].set(0.0)
+    kops.lu(bad, health=True)  # demotes the no-pivot backends for this shape
+    assert solvers.demotions()
+    with solvers.record_dispatches() as log:
+        f = kops.lu(a)  # plain unscreened call, same shape
+    assert log[0][1] == "pallas_fused"
+    np.testing.assert_array_equal(
+        np.asarray(f), np.asarray(kops.lu(a, impl="pallas_fused"))
+    )
+
+
+def test_demotion_ttl_expires():
+    n = 56
+    bad = dd(n, 7).at[0, 0].set(0.0)
+    a = dd(n, 7)
+    kops.lu(bad, health=True)
+    assert solvers.demotions()
+    for _ in range(solvers.DEMOTION_TTL):
+        kops.lu(a, health=True)  # screened same-shape dispatches age the table
+    assert not solvers.demotions()
+    with solvers.record_dispatches() as log:
+        kops.lu(a, health=True)
+    assert log[0][1] == "pallas_fused"  # original winner restored
+
+
+def test_verify_residual_composed_path_escalates_to_pivoted():
+    n = 64
+    a = dd(n, 8).at[0, 0].set(0.0)
+    b = rhs(n, 108)
+    with solvers.record_escalations() as esc:
+        x = kops.linear_solve(a, b, verify_residual=True)
+    assert ("composed", "pivoted") in [(e[1], e[2]) for e in esc]
+    assert float(relative_residual(a, b, x)) <= solvers.VERIFY_RESIDUAL_DEFAULT_BOUND
+
+
+def test_verify_residual_fused_tier_escalates_between_twins():
+    n = 128
+    a = dd(n, 9)
+    b = rhs(n, 109)
+    with solvers.inject(backend_raises=True, backend="bf16_ir", op="linear_solve"):
+        with solvers.record_escalations() as esc:
+            x = kops.linear_solve(a, b, tolerance=1e-5)
+    assert [(e[1], e[2]) for e in esc] == [("bf16_ir", "bf16_ir_xla")]
+    assert float(relative_residual(a, b, x)) <= 1e-5
+
+
+def test_verify_residual_default_path_is_untouched():
+    n = 48
+    a, b = dd(n, 10), rhs(n, 110)
+    ref = kops.linear_solve(a, b)
+    np.testing.assert_array_equal(
+        np.asarray(kops.linear_solve(a, b, verify_residual=True)), np.asarray(ref)
+    )
+
+
+# ---------------------------------------------------------------------------
+# serve-layer degradation
+# ---------------------------------------------------------------------------
+def test_flush_isolates_poisoned_group_end_to_end():
+    """The ISSUE's acceptance proof: 1 poisoned group among 3, in one flush."""
+    n1, n2, n3 = 48, 64, 80
+    a1, a3 = dd(n1, 11), dd(n3, 13)
+    a2 = dd(n2, 12).at[0, 0].set(jnp.nan)  # NaN operand: nothing can factor it
+    b1, b2, b3 = rhs(n1, 111), rhs(n2, 112), rhs(n3, 113)
+
+    ref = SolveService()
+    ref1, ref3 = ref.solve(a1, b1), ref.solve(a3, b3)
+
+    svc = SolveService()
+    t1 = svc.submit(a1, b1)
+    t2a = svc.submit(a2, b2)
+    t2b = svc.submit(a2, b2 * 2.0)  # same poisoned group, coalesced
+    t3 = svc.submit(a3, b3)
+    res = svc.flush()
+
+    # poisoned tickets: structured failure VALUES, not NaN arrays/exceptions
+    for t in (t2a, t2b):
+        assert isinstance(res[t], solvers.SolveFailure)
+        assert res[t].chain
+    # healthy tickets: bitwise-unchanged answers
+    np.testing.assert_array_equal(np.asarray(res[t1]), np.asarray(ref1))
+    np.testing.assert_array_equal(np.asarray(res[t3]), np.asarray(ref3))
+    # the unhealthy factor never entered the LRU; the fingerprint is quarantined
+    assert fingerprint(a2) not in svc._lru
+    assert fingerprint(a2) in svc.quarantined_fingerprints()
+    assert svc.stats.failed_requests == 2
+    assert svc.stats.escalations > 0
+
+    # identical healthy rerun: zero escalations, proven by the registry hook
+    solvers.clear_demotions()
+    with solvers.record_escalations() as esc:
+        t5 = svc.submit(a1, b1)
+        res2 = svc.flush()
+    assert not esc
+    np.testing.assert_array_equal(np.asarray(res2[t5]), np.asarray(ref1))
+
+
+def test_quarantine_short_circuits_and_expires():
+    n = 64
+    bad = dd(n, 14).at[0, 0].set(jnp.nan)
+    b = rhs(n, 114)
+    svc = SolveService(quarantine_ttl=2)
+    t = svc.submit(bad, b)
+    first = svc.flush()[t]
+    assert isinstance(first, solvers.SolveFailure)
+    fd = svc.stats.factor_dispatches
+    t2 = svc.submit(bad, b)
+    again = svc.flush()[t2]
+    assert again is first  # the cached failure value, no re-dispatch
+    assert svc.stats.factor_dispatches == fd
+    assert svc.stats.quarantined == 1
+    svc.flush()  # ttl flush 2 of 2
+    assert fingerprint(bad) in svc.quarantined_fingerprints()
+    svc.flush()  # expired now
+    assert fingerprint(bad) not in svc.quarantined_fingerprints()
+    solvers.clear_demotions()
+
+
+def test_deadline_shedding_with_clock():
+    now = [0.0]
+    svc = SolveService(clock=lambda: now[0])
+    a, b = dd(48, 15), rhs(48, 115)
+    t_late = svc.submit(a, b, deadline=1.0)
+    t_fine = svc.submit(a, b * 2.0, deadline=100.0)
+    now[0] = 10.0
+    res = svc.flush()
+    assert isinstance(res[t_late], DeadlineMiss)
+    assert res[t_late].deadline == 1.0 and res[t_late].now == 10.0
+    assert not isinstance(res[t_fine], DeadlineMiss)
+    assert svc.stats.shed_deadline == 1
+    # without a clock, deadlines only order (historical behaviour)
+    svc2 = SolveService()
+    t = svc2.submit(a, b, deadline=1.0)
+    assert not isinstance(svc2.flush()[t], DeadlineMiss)
+
+
+def test_result_distinguishes_unknown_and_unflushed():
+    svc = SolveService()
+    a, b = dd(32, 16), rhs(32, 116)
+    t = svc.submit(a, b)
+    with pytest.raises(NotFlushed):
+        svc.result(t)
+    svc.flush()
+    svc.result(t)
+    with pytest.raises(UnknownTicket):
+        svc.result(t)  # already redeemed
+    with pytest.raises(UnknownTicket):
+        svc.result(10_000)  # never issued
+    # both are KeyError subclasses (back-compat with existing callers)
+    assert issubclass(UnknownTicket, KeyError)
+    assert issubclass(NotFlushed, KeyError)
+
+
+def test_solve_raises_terminal_failure():
+    n = 48
+    bad = dd(n, 17).at[0, 0].set(jnp.nan)
+    svc = SolveService()
+    with pytest.raises(solvers.SolveFailure):
+        svc.solve(bad, rhs(n, 117))
+    solvers.clear_demotions()
+
+
+def test_slow_dispatch_fault_trips_deadline_on_reflush():
+    """A straggler dispatch makes later queued work miss its deadline; the
+    next flush sheds it instead of serving a stale answer."""
+    import time as _time
+
+    svc = SolveService(clock=_time.monotonic)
+    a, b = dd(48, 18), rhs(48, 118)
+    with solvers.inject(slow_dispatch_us=50_000, op="factor"):
+        t1 = svc.submit(a, b, deadline=_time.monotonic() + 1000.0)
+        svc.flush()
+    t2 = svc.submit(a, b * 3.0, deadline=_time.monotonic() - 1.0)  # already late
+    res = svc.flush()
+    assert isinstance(res[t2], DeadlineMiss)
+    svc.result(t1)  # the slow-but-served ticket still redeemable
+
+
+def test_serve_quarantine_on_injected_solve_fault():
+    """Faults on the solve op (factor healthy, substitution crashes on every
+    backend) also degrade to per-ticket failures + quarantine."""
+    n = 96
+    a, b = dd(n, 19), rhs(n, 119)
+    svc = SolveService()
+    with solvers.inject(backend_raises=True, op="solve"):
+        t = svc.submit(a, b)
+        res = svc.flush()
+    assert isinstance(res[t], solvers.SolveFailure)
+    assert fingerprint(a) in svc.quarantined_fingerprints()
+
+
+# ---------------------------------------------------------------------------
+# cache hardening (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("payload", ['{"entries": "nope"}', "[1, 2, 3]", "{trunc"])
+def test_corrupt_autotune_cache_warns_and_starts_empty(tmp_path, payload):
+    p = tmp_path / "cache.json"
+    p.write_text(payload)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        cache = solvers.AutotuneCache.load(str(p))
+    assert cache.entries == []
+
+
+def test_missing_cache_stays_silent(tmp_path):
+    import warnings as _warnings
+
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        cache = solvers.AutotuneCache.load(str(tmp_path / "absent.json"))
+    assert cache.entries == []

@@ -1,0 +1,200 @@
+"""Factor health screening: the bitwise twin contract.
+
+Every Pallas kernel in the repo has a pure-jnp mirror producing
+bitwise-identical packed factors, so the :class:`FactorHealth` records
+computed from them must be bitwise-identical too — for healthy operands,
+exactly singular ones, and near-singular (tiny-pivot) ones alike.  These
+tests sweep every kernel/mirror pair (dense fused, banded blocked, batched
+grid, the bf16 factor the bf16_ir tier refines from, and the randomized
+rank-k tier) across n ∈ {8, 256, 1024} and assert record equality plus the
+expected verdict per operand class.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    DEFAULT_THRESHOLDS,
+    HealthThresholds,
+    PivotedFactors,
+    factor_health,
+    make_banded_dd,
+    make_diagonally_dominant,
+    pivoted_lu,
+    pivoted_solve,
+    relative_residual,
+    to_banded,
+    from_banded,
+)
+from repro.core import blocked as core_blocked
+from repro.core import randomized as core_rand
+from repro.kernels import ebv_lu as kfused
+from repro.kernels import ops as kops
+
+NS = [8, 256, 1024]
+KINDS = ["healthy", "singular", "tiny"]
+BW = 2
+
+
+def dense_operand(n: int, kind: str) -> jax.Array:
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    if kind == "singular":
+        return a.at[0, 0].set(0.0)
+    if kind == "tiny":
+        return a.at[0, 0].set(1e-12)
+    return a
+
+
+def banded_operand(n: int, kind: str) -> jax.Array:
+    arow = make_banded_dd(jax.random.PRNGKey(n + 1), n, BW)
+    if kind == "singular":
+        return arow.at[0, BW].set(0.0)
+    if kind == "tiny":
+        return arow.at[0, BW].set(1e-12)
+    return arow
+
+
+def assert_identical_records(fa, fb, ref_max, bw=0):
+    """The twin contract: same packed factors ⇒ bitwise-same health record
+    (every field) and the same verdict."""
+    ra = factor_health(fa, ref_max=ref_max, bw=bw)
+    rb = factor_health(fb, ref_max=ref_max, bw=bw)
+    for field, xa, xb in zip(ra._fields, ra, rb):
+        # cast to f32 for the comparison: numpy's NaN-aware equality does
+        # not recognise the bfloat16 extension dtype (bf16 → f32 is exact)
+        np.testing.assert_array_equal(
+            np.asarray(xa, np.float32), np.asarray(xb, np.float32),
+            err_msg=f"FactorHealth.{field} differs between kernel and mirror",
+        )
+    assert ra.verdict() == rb.verdict()
+    return ra
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", NS)
+def test_dense_twins_identical_records(n, kind):
+    a = dense_operand(n, kind)
+    ref = jnp.max(jnp.abs(a))
+    fa = kops.lu(a, impl="pallas_fused")
+    fb = kops.lu(a, impl="xla")
+    rec = assert_identical_records(fa, fb, ref)
+    assert rec.verdict() == (kind == "healthy")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", NS)
+def test_banded_twins_identical_records(n, kind):
+    arow = banded_operand(n, kind)
+    ref = jnp.max(jnp.abs(arow))
+    fa = kops.banded_lu(arow, bw=BW, impl="pallas_blocked")
+    fb = kops.banded_lu(arow, bw=BW, impl="xla")
+    rec = assert_identical_records(fa, fb, ref, bw=BW)
+    assert rec.verdict() == (kind == "healthy")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", NS)
+def test_batched_twins_identical_records(n, kind):
+    # one healthy member + one of the probed class: the batch record must
+    # reduce to the worst member, so any poisoned member taints the verdict
+    ab = jnp.stack([dense_operand(n, "healthy"), dense_operand(n, kind)])
+    ref = jnp.max(jnp.abs(ab))
+    fa = kops.lu(ab, impl="pallas")
+    fb = kops.lu(ab, impl="xla")
+    # the batched grid kernel and the vmapped mirror agree numerically but
+    # not bitwise (different reduction order), so the contract here is the
+    # verdict, not the raw record bits
+    ra = factor_health(fa, ref_max=ref)
+    rb = factor_health(fb, ref_max=ref)
+    assert ra.verdict() == rb.verdict() == (kind == "healthy")
+    if kind == "healthy":
+        np.testing.assert_allclose(
+            float(ra.min_pivot), float(rb.min_pivot), rtol=1e-5
+        )
+        np.testing.assert_allclose(float(ra.growth), float(rb.growth), rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", NS)
+def test_bf16_tier_twins_identical_records(n, kind):
+    # the factor the bf16_ir tier refines from: bf16 cast, factored by the
+    # fused kernel vs its mirror (use_kernel True/False in the backend)
+    a16 = dense_operand(n, kind).astype(jnp.bfloat16)
+    ref = jnp.max(jnp.abs(a16)).astype(jnp.float32)
+    fa = kfused.lu_fused(a16)
+    fb = core_blocked.fused_blocked_lu(a16)
+    assert_identical_records(fa, fb, ref)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("n", NS)
+def test_rand_lu_tier_twins_identical_records(n, kind):
+    a = dense_operand(n, kind)
+    rank = max(2, n // 4)
+    key = jax.random.PRNGKey(7)
+    ref = jnp.max(jnp.abs(a))
+    fa = core_rand.randomized_lu(a, rank=rank, key=key, lu_impl=kfused.lu_fused)
+    fb = core_rand.randomized_lu(
+        a, rank=rank, key=key, lu_impl=core_blocked.fused_blocked_lu
+    )
+    assert_identical_records(fa, fb, ref)
+
+
+# ---------------------------------------------------------------------------
+# verdict semantics
+# ---------------------------------------------------------------------------
+def test_thresholds_are_configurable():
+    a = dense_operand(256, "healthy")
+    _, rec = kops.lu(a, health=True)
+    assert rec.verdict(DEFAULT_THRESHOLDS)
+    # an absurdly strict pivot floor flips the same record to unhealthy
+    assert not rec.verdict(HealthThresholds(min_pivot_ratio=10.0))
+    assert not rec.verdict(HealthThresholds(max_growth=1e-6))
+
+
+def test_nan_record_never_passes():
+    a = dense_operand(64, "singular")
+    packed = kops.lu(a, impl="xla")
+    rec = factor_health(packed, ref_max=jnp.max(jnp.abs(a)))
+    assert not rec.verdict()
+    # even with finiteness forgiven, the NaN-poisoned growth/pivot fields
+    # compare False against any threshold
+    assert not rec.verdict(HealthThresholds(require_finite=False))
+    assert "non-finite" in rec.report()
+
+
+def test_pivoted_fallback_solves_what_no_pivot_cannot():
+    n = 96
+    a = dense_operand(n, "singular")  # a[0,0] == 0: no-pivot LU dies instantly
+    b = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    f = pivoted_lu(a)
+    assert isinstance(f, PivotedFactors)
+    rec = factor_health(f, ref_max=jnp.max(jnp.abs(a)))
+    assert rec.verdict()
+    x = pivoted_solve(f, b)
+    assert float(relative_residual(a, b, x)) < 1e-4
+
+
+def test_relative_residual_banded_matches_dense():
+    n = 64
+    arow = banded_operand(n, "healthy")
+    dense = from_banded(arow)
+    b = jax.random.normal(jax.random.PRNGKey(5), (n,))
+    x = jax.random.normal(jax.random.PRNGKey(6), (n,))
+    rb = float(relative_residual(arow, b, x, bw=BW))
+    rd = float(relative_residual(dense, b, x))
+    np.testing.assert_allclose(rb, rd, rtol=1e-5)
+
+
+def test_health_record_travels_with_batched_and_banded_ops():
+    arow = banded_operand(128, "healthy")
+    fb, rec_b = kops.banded_lu(arow, bw=BW, health=True)
+    assert rec_b.verdict()
+    np.testing.assert_array_equal(
+        np.asarray(fb), np.asarray(kops.banded_lu(arow, bw=BW))
+    )
+    ab = jnp.stack([dense_operand(64, "healthy"), dense_operand(64, "healthy")])
+    fd, rec_d = kops.lu(ab, health=True)
+    assert rec_d.verdict()
+    np.testing.assert_array_equal(np.asarray(fd), np.asarray(kops.lu(ab)))
