@@ -83,10 +83,14 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
     t = time_call(lambda: numpy_banded_baseline(arow_np, bw), warmup=0, iters=1)
     rows_us[f"banded_lu_n{nb}_numpy"] = t * 1e6
     emit(f"banded_lu_n{nb}_numpy", t)
-    lub = kops.banded_lu(arow, bw=bw)
+    # factor ONCE with enrich=True: the diagonal-block inverses are a
+    # factor-time cost, so the solve shootout times every impl against the
+    # same solve-ready Factorization artifact (pallas/xla_scalar read only
+    # its packed factors; pallas_inverted consumes the enrichments)
+    lub = kops.banded_lu(arow, bw=bw, enrich=True)
     b = jax.random.normal(jax.random.PRNGKey(1), (nb,))
     fns = {impl: functools.partial(lambda impl, l, r: kops.banded_solve(l, r, bw=bw, impl=impl), impl)
-           for impl in ("pallas", "xla_scalar")}
+           for impl in ("pallas", "xla_scalar", "pallas_inverted")}
     banded_solve_times = time_shootout(fns, lub, b, iters=5)
     tune.record(Problem(op="solve", structure="banded", n=nb, bw=bw, rhs=1),
                 {impl: t * 1e6 for impl, t in banded_solve_times.items()})
@@ -94,6 +98,19 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
         rows_us[f"banded_solve_n{nb}_{impl}"] = t * 1e6
         emit(f"banded_solve_n{nb}_{impl}", t)
     tune.save()  # dispatch decisions now provably follow the committed rows
+
+    # --- stacked-RHS dense substitution at transfer scale: one n=4096
+    # artifact (factored+enriched once, untimed — the factor-once/solve-many
+    # traffic shape) serving 64 coalesced RHS columns through the
+    # inverted-diagonal trsm with equalized RHS tiling.  Tracks the wide
+    # dispatches the solve service emits after RHS coalescing.
+    nt, rt = 4096, 64
+    at = make_diagonally_dominant(jax.random.PRNGKey(nt), nt)
+    art = kops.lu(at, enrich=True)
+    bt = jax.random.normal(jax.random.PRNGKey(2), (nt, rt))
+    t = time_call(lambda: kops.lu_solve(art, bt), iters=5)
+    rows_us[f"trsm_n{nt}_stacked_r{rt}"] = t * 1e6
+    emit(f"trsm_n{nt}_stacked_r{rt}", t)
 
     # --- optimizer trajectory: the EbV-preconditioned step on a model of
     # (128, 128) parameter factors.  `opt_step_d128_registry` is the full

@@ -98,6 +98,16 @@ def _operands(problem):
     fp = Problem(op="factor", structure=problem.structure, n=problem.n,
                  dtype=problem.dtype, bw=problem.bw, batch=problem.batch)
     lu = get_backend("factor", problem.structure, "xla").call(fp, a, bw=problem.bw)
+    # hand the shootout a solve-ready Factorization artifact: enrichment
+    # (diagonal-block inversion) is a factor-time cost, so the inverted
+    # backends must be timed against pre-enriched operands — the legacy
+    # backends unwrap ``.packed`` and are unaffected
+    from repro.core import factorization as fz
+
+    if problem.structure == "banded" and not problem.batched:
+        lu = fz.banded_artifact(lu, bw=problem.bw)
+    elif problem.structure == "dense" and not problem.batched:
+        lu = fz.dense_artifact(lu)
     shape = ((problem.batch,) if problem.batched else ()) + (problem.n,)
     if problem.rhs > 1:
         shape = shape + (problem.rhs,)  # rhs == 1 stays a vector RHS

@@ -83,6 +83,20 @@ assert picked == winner, (
     f"BENCH winner ({winner}): {measured}")
 print(f"banded_solve auto dispatch == measured winner: {winner}")
 
+# solve-phase crown: the Pallas inverted-diagonal solve must stay within
+# BANDED_SOLVE_MAX_RATIO (default 1.5) of the xla_scalar reference at the
+# paper's sparse shape — it currently *beats* it ~3x, so this trips only
+# on a genuine substitution-path regression, not timer noise
+import os
+ratio_bound = float(os.environ.get("BANDED_SOLVE_MAX_RATIO", "1.5"))
+inv = rows[f"{prefix}pallas_inverted"]
+ref = rows[f"{prefix}xla_scalar"]
+assert inv <= ratio_bound * ref, (
+    f"banded_solve pallas_inverted ({inv:.0f}us) > {ratio_bound}x "
+    f"xla_scalar ({ref:.0f}us)")
+print(f"banded_solve pallas_inverted/xla_scalar: {inv / ref:.2f}x "
+      f"(bound {ratio_bound}x)")
+
 # accuracy gate: every approximate tier's measured residual must stay
 # within the bound its backend declares to the selection funnel — an
 # accuracy drift past the advertised tier fails CI here, at bench scale,

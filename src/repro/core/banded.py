@@ -128,6 +128,7 @@ def banded_lu(arow: jax.Array, *, bw: int) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("bw",))
 def banded_solve(lu_band: jax.Array, b: jax.Array, *, bw: int) -> jax.Array:
     """Forward+backward substitution on the packed band factors."""
+    lu_band = getattr(lu_band, "packed", lu_band)
     n = lu_band.shape[0]
 
     # forward: y_i = b_i − Σ_t L[i, i-bw+t] · y_{i-bw+t}
@@ -387,6 +388,7 @@ def banded_solve_blocked(
     """Blocked forward+backward substitution on the packed band factors —
     op-identical mirror of
     :func:`repro.kernels.banded.banded_solve_kernelized`."""
+    lu_band = getattr(lu_band, "packed", lu_band)
     n = lu_band.shape[0]
     squeeze = b.ndim == 1
     bm = b[:, None] if squeeze else b

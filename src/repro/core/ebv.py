@@ -150,6 +150,7 @@ def ebv_lu(a: jax.Array) -> jax.Array:
 
 def unpack_lu(lu: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Split the packed array into explicit (L, U) with unit diagonal on L."""
+    lu = getattr(lu, "packed", lu)  # accept Factorization artifacts
     n = lu.shape[-1]
     eye = jnp.eye(n, dtype=lu.dtype)
     l = jnp.tril(lu, -1) + eye

@@ -154,6 +154,10 @@ def factor_health(factors, *, ref_max, bw: int = 0) -> FactorHealth:
     from .pivoted import PivotedFactors
     from .randomized import RankKFactors
 
+    # Factorization artifacts screen on their packed payload (attribute
+    # access instead of an isinstance to keep this module import-cycle-free
+    # with repro.core.factorization).
+    factors = getattr(factors, "packed", factors)
     ref_max = jnp.asarray(ref_max, jnp.float32)
     if isinstance(factors, RankKFactors):
         # no square pivot sequence: the analogue of a vanished pivot is a

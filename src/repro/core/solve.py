@@ -82,6 +82,7 @@ def upper_solve_packed(u_packed: jax.Array, b: jax.Array) -> jax.Array:
 
 def lu_solve(lu: jax.Array, b: jax.Array) -> jax.Array:
     """Both substitution phases against a packed EbV factorization."""
+    lu = getattr(lu, "packed", lu)  # accept Factorization artifacts
     return backward_substitution(lu, forward_substitution(lu, b))
 
 

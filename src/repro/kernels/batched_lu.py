@@ -65,6 +65,7 @@ def _batched_solve_kernel(lu_ref, b_ref, x_ref, *, n: int):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def batched_lu_solve_vmem(lu: jax.Array, b: jax.Array, *, interpret: bool | None = None) -> jax.Array:
     """lu: (B, n, n) packed; b: (B, n, m) → x: (B, n, m)."""
+    lu = getattr(lu, "packed", lu)  # accept Factorization artifacts
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     bsz, n, _ = lu.shape

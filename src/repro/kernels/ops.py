@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import health as _chealth
+from repro.core.factorization import Factorization, factorize_banded, factorize_dense
 from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
 
@@ -133,7 +134,26 @@ def _batched_impl(op: str, structure: str, impl: str | None) -> str | None:
         return None
     if impl != "pallas":  # legacy auto alias has no unbatched backend record
         _sol().get_backend(op, structure, impl)  # raises "unknown impl ..."
+    if impl == "pallas_inverted":  # has a batched slot of its own (vmapped)
+        return impl
     return "xla" if impl.startswith("xla") else "pallas_vmem"
+
+
+def _as_artifact(packed, *, structure: str, bw: int = 0, block=None,
+                 tier: float = 0.0, health_rec=None, enrich: bool = False):
+    """Wrap an eager packed factor into the :class:`Factorization` artifact
+    (the new factor→solve contract).  Special factor layouts (pivoted,
+    rank-k), traced values (artifacts are a Python-level cache object) and
+    already-wrapped results pass through unchanged."""
+    if isinstance(packed, (Factorization, PivotedFactors, RankKFactors, jax.core.Tracer)):
+        return packed
+    if packed.ndim > 3:  # deep-batched stacks stay raw (no batched enrichment)
+        return packed
+    if structure == "dense":
+        return factorize_dense(packed, block=block or 256, tier=tier,
+                               health=health_rec, enrich=enrich)
+    return factorize_banded(packed, bw=bw, block=block, tier=tier,
+                            health=health_rec, enrich=enrich)
 
 
 def _with_batch_rule(unbatched_fn, batched_fn):
@@ -198,6 +218,7 @@ def lu(
     oversample: int = 8,
     rng_key=None,
     health=None,
+    enrich: bool = False,
 ) -> jax.Array:
     """Packed EbV LU factorization (no pivoting — paper contract).
 
@@ -219,7 +240,15 @@ def lu(
     at the partial-pivoting ``pivoted`` fallback for dense operands),
     raising :class:`repro.solvers.SolveFailure` only when every candidate
     fails.  ``health=None`` (the default) is bitwise-identical to the
-    pre-screening op."""
+    pre-screening op.
+
+    Eager calls return a :class:`repro.core.factorization.Factorization`
+    artifact wrapping the packed factors (it quacks like the packed array —
+    the one-release shim); ``enrich=True`` additionally pre-inverts the
+    solve blocks at factor time so downstream solves can take the
+    inverted-diagonal GEMM path with zero layout work.  Traced calls and
+    special factor layouts (pivoted, rank-k, distributed) return their
+    legacy values unchanged."""
     thresholds = _screen(health)
     ref_max = jnp.max(jnp.abs(a)) if thresholds is not None else None
 
@@ -254,7 +283,10 @@ def lu(
             tolerance=tolerance, validate=validate,
         )
         out = out.reshape(lead + tail)
-        return out if thresholds is None else (out, _record(out))
+        rec = None if thresholds is None else _record(out)
+        out = _as_artifact(out, structure="dense", block=block, tier=tolerance,
+                           health_rec=rec, enrich=enrich)
+        return out if thresholds is None else (out, rec)
 
     if validate is not None:
         # Screened eager call: go straight to the 2-D dispatch — the vmap
@@ -263,14 +295,19 @@ def lu(
         out = _lu_2d(a, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
                      tolerance=tolerance, rank=rank, oversample=oversample,
                      rng_key=rng_key, validate=validate)
-        return out, _record(out)
+        rec = _record(out)
+        return _as_artifact(out, structure="dense", block=block, tier=tolerance,
+                            health_rec=rec, enrich=enrich), rec
     out = _with_batch_rule(
         lambda x: _lu_2d(x, impl=impl, block=block, col_tile=col_tile, interpret=interpret,
                          tolerance=tolerance, rank=rank, oversample=oversample, rng_key=rng_key),
         lambda xs: _lu_batched(xs, impl=impl, block=block, interpret=interpret,
                                tolerance=tolerance),
     )(a)
-    return out if thresholds is None else (out, _record(out))
+    rec = None if thresholds is None else _record(out)
+    out = _as_artifact(out, structure="dense", block=block, tier=tolerance,
+                       health_rec=rec, enrich=enrich)
+    return out if thresholds is None else (out, rec)
 
 
 # ---------------------------------------------------------------------------
@@ -328,6 +365,21 @@ def lu_solve(
             tolerance=float(tolerance),
         )
         return _sol().dispatch(problem, lu_packed, b, impl="rand_lu")
+    if isinstance(lu_packed, Factorization):
+        # The artifact is a Python-level pytree, not a jax array: it must
+        # not flow through the custom_vmap wrapper (which traces even on
+        # eager calls).  Dispatch directly — Problem.from_arrays reads its
+        # duck-typed shape/dtype and the ``enriched`` capability flag, and
+        # backends unwrap via ``packed_of`` (the one-release shim).
+        if lu_packed.ndim >= 3:
+            return _lu_solve_batched(
+                lu_packed, b, impl=impl, block=block, interpret=interpret,
+                tolerance=tolerance,
+            )
+        return _lu_solve_2d(
+            lu_packed, b, impl=impl, block=block, rhs_tile=rhs_tile,
+            interpret=interpret, tolerance=tolerance,
+        )
     if lu_packed.ndim >= 3:
         if lu_packed.ndim > 3:  # fold extra leading batch dims, like lu()
             lead, tail = lu_packed.shape[:-2], lu_packed.shape[-2:]
@@ -426,7 +478,8 @@ def linear_solve(
             return x[..., 0] if squeeze else x
         # tolerance too tight for every approximate tier: compose the exact
         # factor+solve below (tolerance still keys their cache rows)
-    lu_kw = {k: v for k, v in kw.items() if k in ("impl", "block", "col_tile", "interpret")}
+    lu_kw = {k: v for k, v in kw.items()
+             if k in ("impl", "block", "col_tile", "interpret", "enrich")}
     solve_kw = {k: v for k, v in kw.items() if k in ("block", "rhs_tile", "interpret")}
     lu_kw["tolerance"] = solve_kw["tolerance"] = tolerance
     if solve_impl is None and kw.get("impl") is not None:
@@ -507,6 +560,7 @@ def banded_lu(
     interpret: bool | None = None,
     tolerance: float = 0.0,
     health=None,
+    enrich: bool = False,
 ) -> jax.Array:
     """Packed band LU on the row-aligned band (no pivoting).  ``tolerance``
     keys selection/cache like the dense ops (no approximate banded tier
@@ -514,7 +568,13 @@ def banded_lu(
     or a :class:`HealthThresholds`) returns ``(factors, FactorHealth)`` and
     screens eager auto dispatches exactly like :func:`lu` — the band has no
     pivoted last resort, so an unhealthy band factor escalates through the
-    remaining band backends and then fails structurally."""
+    remaining band backends and then fails structurally.
+
+    Eager calls return a :class:`repro.core.factorization.Factorization`
+    artifact (array-duck-typed shim over the packed band); ``enrich=True``
+    pre-inverts the (C, C) diagonal blocks and pre-couples the off-band
+    strips at factor time, unlocking the two-phase inverted-diagonal solve
+    (``banded_solve`` impl ``"pallas_inverted"``)."""
     thresholds = _screen(health)
     ref_max = jnp.max(jnp.abs(arow)) if thresholds is not None else None
 
@@ -533,21 +593,29 @@ def banded_lu(
             interpret=interpret, tolerance=tolerance, validate=validate,
         )
         out = out.reshape(lead + out.shape[1:])
-        return out if thresholds is None else (out, _record(out))
+        rec = None if thresholds is None else _record(out)
+        out = _as_artifact(out, structure="banded", bw=bw, block=block,
+                           tier=tolerance, health_rec=rec, enrich=enrich)
+        return out if thresholds is None else (out, rec)
     if validate is not None:
         # screened eager call: skip the vmap wrapper (it traces, which
         # would blind the validator) and dispatch the 2-D band directly
         out = _banded_lu_2d(arow, bw=bw, impl=impl, block=block,
                             interpret=interpret, tolerance=tolerance,
                             validate=validate)
-        return out, _record(out)
+        rec = _record(out)
+        return _as_artifact(out, structure="banded", bw=bw, block=block,
+                            tier=tolerance, health_rec=rec, enrich=enrich), rec
     out = _with_batch_rule(
         lambda x: _banded_lu_2d(x, bw=bw, impl=impl, block=block, interpret=interpret,
                                 tolerance=tolerance),
         lambda xs: _banded_lu_batched(xs, bw=bw, impl=impl, block=block,
                                       interpret=interpret, tolerance=tolerance),
     )(arow)
-    return out if thresholds is None else (out, _record(out))
+    rec = None if thresholds is None else _record(out)
+    out = _as_artifact(out, structure="banded", bw=bw, block=block,
+                       tier=tolerance, health_rec=rec, enrich=enrich)
+    return out if thresholds is None else (out, rec)
 
 
 def _banded_solve_2d(lu_band, b, *, bw, impl, block, rhs_tile, interpret, tolerance=0.0):
@@ -583,7 +651,21 @@ def banded_solve(
     it with the ``banded_solve_n16384_*`` shootout, so the auto path picks
     whatever actually won on this host (``xla_scalar`` beats the blocked
     kernel 2.4 ms vs 8.1 ms under interpret-mode DMA emulation on this CPU
-    container; on a real TPU the measurement flips back)."""
+    container; on a real TPU the measurement flips back).  An *enriched*
+    :class:`Factorization` operand additionally admits the two-phase
+    inverted-diagonal path (``"pallas_inverted"``), which wins the n=16384
+    shootout outright on this container."""
+    if isinstance(lu_band, Factorization):
+        # bypass the custom_vmap wrapper — see lu_solve
+        if lu_band.ndim >= 3:
+            return _banded_solve_batched(
+                lu_band, b, bw=bw, impl=impl, block=block, interpret=interpret,
+                tolerance=tolerance,
+            )
+        return _banded_solve_2d(
+            lu_band, b, bw=bw, impl=impl, block=block, rhs_tile=rhs_tile,
+            interpret=interpret, tolerance=tolerance,
+        )
     if lu_band.ndim >= 3:
         if lu_band.ndim > 3:  # fold extra leading batch dims, like banded_lu()
             lead, tail = lu_band.shape[:-2], lu_band.shape[-2:]

@@ -30,8 +30,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.blocked import pad_identity_tail as _pad_identity_tail
 from repro.core.blocked import strip_trsm as _strip_trsm
+from repro.core.factorization import equalized_rhs_tile, inverted_dense_sweeps
 
-__all__ = ["solve_vmem", "solve_tiled"]
+__all__ = ["solve_vmem", "solve_tiled", "solve_inverted"]
 
 
 def _solve_kernel(lu_ref, b_ref, x_ref, *, n: int):
@@ -65,6 +66,7 @@ def solve_vmem(
     (n, m); the RHS columns are tiled across the grid.  RHS widths that do
     not divide ``rhs_tile`` are zero-padded to the next tile multiple and
     sliced back (zero columns solve to zero, so padding is inert)."""
+    lu = getattr(lu, "packed", lu)  # accept Factorization artifacts
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     squeeze = b.ndim == 1
@@ -170,6 +172,7 @@ def solve_tiled(
     program per RHS column tile.  Only one ``(block, block)`` LU tile is
     on-chip at a time, so the solve scales to matrices far past what
     :func:`solve_vmem` can hold (~4096² fp32)."""
+    lu = getattr(lu, "packed", lu)  # accept Factorization artifacts
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     squeeze = b.ndim == 1
@@ -205,5 +208,98 @@ def solve_tiled(
         ],
         interpret=interpret,
     )(lu, bm)
+    x = x[:n, :m].astype(out_dtype)
+    return x[:, 0] if squeeze else x
+
+
+def _solve_inverted_kernel(
+    lu_any, linv_any, uinv_any, b_ref, x_ref, ltile, ibuf, sem, isem,
+    *, num_steps: int, block: int,
+):
+    """One RHS-tile program of the inverted-diagonal blocked solve: the
+    factor and the ``(S, B, B)`` inverse stacks stay in HBM; per step one
+    off-diagonal tile or one inverse block is DMA'd to VMEM and every
+    diagonal step is pure GEMM
+    (:func:`repro.core.factorization.inverted_dense_sweeps`)."""
+    B = block
+
+    def read_tile(r, i):
+        dma = pltpu.make_async_copy(
+            lu_any.at[pl.ds(r * B, B), pl.ds(i * B, B)], ltile, sem
+        )
+        dma.start()
+        dma.wait()
+        return ltile[...]
+
+    def _read_inv(src, i):
+        dma = pltpu.make_async_copy(src.at[pl.ds(i, 1)], ibuf, isem)
+        dma.start()
+        dma.wait()
+        return ibuf[0]
+
+    x_ref[...] = inverted_dense_sweeps(
+        read_tile,
+        functools.partial(_read_inv, linv_any),
+        functools.partial(_read_inv, uinv_any),
+        b_ref[...],
+        num_steps=num_steps,
+        block=B,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rhs_tile", "interpret"))
+def solve_inverted(
+    lu: jax.Array,
+    linv: jax.Array,
+    uinv: jax.Array,
+    b: jax.Array,
+    *,
+    rhs_tile: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Blocked ``(LU) x = b`` solve consuming a
+    :class:`~repro.core.factorization.Factorization` artifact's pre-inverted
+    ``(S, B, B)`` diagonal blocks: the per-diagonal-block ``strip_trsm``
+    recurrence and the scalar backward loop of :func:`solve_tiled` are
+    replaced by one GEMM against the stored inverse — the whole sweep is
+    GEMM + rank-``B`` retirement.  RHS columns run in *equalized* tiles
+    (:func:`repro.core.factorization.equalized_rhs_tile`), sized for the
+    wide stacked-RHS dispatches the solve service coalesces.
+    Bitwise-identical to
+    :func:`repro.core.factorization.dense_inverted_solve`."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    squeeze = b.ndim == 1
+    bm = b[:, None] if squeeze else b
+    out_dtype = bm.dtype
+    compute_dtype = jnp.promote_types(jnp.float32, jnp.promote_types(lu.dtype, out_dtype))
+    n, m = bm.shape
+    S, B = linv.shape[0], linv.shape[1]
+    N = S * B
+    rt = equalized_rhs_tile(m, rhs_tile)
+    M = -(-m // rt) * rt
+    lup = _pad_identity_tail(lu.astype(compute_dtype), N)
+    bm = bm.astype(compute_dtype)
+    if (N, M) != (n, m):
+        bm = jnp.pad(bm, ((0, N - n), (0, M - m)))
+    x = pl.pallas_call(
+        functools.partial(_solve_inverted_kernel, num_steps=S, block=B),
+        grid=(M // rt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((N, rt), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((N, rt), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M), bm.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((B, B), compute_dtype),
+            pltpu.VMEM((1, B, B), linv.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(lup, linv, uinv, bm)
     x = x[:n, :m].astype(out_dtype)
     return x[:, 0] if squeeze else x

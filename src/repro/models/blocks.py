@@ -49,6 +49,7 @@ def init_block(key, cfg: ModelConfig, *, encoder: bool = False):
 def apply_block(
     p, x, cfg: ModelConfig, *, positions, mode="train", cache=None,
     enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None,
+    lengths=None,
 ):
     """One decoder layer.  Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
@@ -88,7 +89,7 @@ def apply_block(
         h = C.apply_norm(p["ln_ssm"], x, cfg.norm)
         so, sc = M.apply_ssm_layer(
             p["ssm"], h, cfg, mode=mode,
-            cache=None if cache is None else cache["ssm"],
+            cache=None if cache is None else cache["ssm"], lengths=lengths,
         )
         if sc is not None:
             new_cache["ssm"] = sc
@@ -103,7 +104,7 @@ def apply_block(
         )
         ssm_out, sc = M.apply_ssm_layer(
             p["ssm"], h, cfg, mode=mode,
-            cache=None if cache is None else cache["ssm"],
+            cache=None if cache is None else cache["ssm"], lengths=lengths,
         )
         if ac is not None:
             new_cache["attn"] = ac

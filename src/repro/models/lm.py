@@ -142,13 +142,14 @@ def _embed_inputs(params, batch, cfg: ModelConfig, *, mode):
 # block stack
 # ---------------------------------------------------------------------------
 def _scan_blocks(params, x, cfg: ModelConfig, *, positions, mode, caches=None,
-                 enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None):
+                 enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None,
+                 lengths=None):
     def body(x, xs):
         bp, cache = xs if caches is not None else (xs, None)
         x, new_cache, aux = B.apply_block(
             bp, x, cfg, positions=positions, mode=mode, cache=cache,
             enc_out=enc_out, kv_chunk=kv_chunk, cache_len=cache_len,
-            seq_positions=seq_positions,
+            seq_positions=seq_positions, lengths=lengths,
         )
         x = constrain(x, ACT_AXES)
         return x, (new_cache, aux)
@@ -230,9 +231,14 @@ def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, l
     seq_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
     x = constrain(x, ACT_AXES)
     seq = x.shape[1]
+    # per-row true lengths (from the serving engine's last= gather) make the
+    # recurrent SSM/hybrid prefill pad-invariant; attention is already
+    # causally inert to right padding.
+    lengths = None if last is None else jnp.asarray(last, jnp.int32) + 1
     x, caches, _ = _scan_blocks(
         params, x, cfg, positions=positions, mode="prefill", enc_out=enc_out,
         kv_chunk=kv_chunk, cache_len=cache_len, seq_positions=seq_pos,
+        lengths=lengths,
     )
     x = C.apply_norm(params["ln_f"], x, cfg.norm)
     if last is None:

@@ -125,10 +125,20 @@ def ssd_chunked(x, dt, a, bmat, cmat, *, chunk: int):
     return y.reshape(b, s_pad, h, p)[:, :s], hfinal
 
 
-def apply_ssm_layer(p, xin, cfg: ModelConfig, *, mode="train", cache=None):
+def apply_ssm_layer(p, xin, cfg: ModelConfig, *, mode="train", cache=None,
+                    lengths=None):
     """Mamba-2 mixer sublayer.  cache: {"conv_x","conv_b","conv_c": raw
     pre-conv tails, "state": (B, H, P, N)} for decode; ``prefill`` returns a
-    freshly built cache, ``train`` returns cache=None."""
+    freshly built cache, ``train`` returns cache=None.
+
+    ``lengths`` ((B,) int32, prefill only): per-row true prompt lengths of a
+    right-padded shape-bucketed batch.  Pad rows get ``dt`` forced to
+    exactly 0 after the softplus — decay ``exp(dt·A) = exp(0) = 1`` leaves
+    the state untouched and the state input ``B·(x·dt) = 0`` adds nothing
+    (the same identity the chunk padding inside :func:`ssd_chunked` relies
+    on) — and the cached conv tails are gathered at each row's true end, so
+    the final state, conv windows and every real row's output are exactly
+    those of the unpadded prompt (pad-invariant prefill)."""
     b, s, _ = xin.shape
     di, n, h, hd, cw = _dims(cfg)
     z = xin @ p["z_proj"]
@@ -143,16 +153,33 @@ def apply_ssm_layer(p, xin, cfg: ModelConfig, *, mode="train", cache=None):
         bmat = _causal_conv(br, p["conv_b"])
         cmat = _causal_conv(cr, p["conv_c"])
         dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+        if lengths is not None:
+            valid = jnp.arange(s)[None, :] < jnp.asarray(lengths, jnp.int32)[:, None]
+            dt = jnp.where(valid[:, :, None], dt, 0.0)
         a = dt * a_neg
         y, hfinal = ssd_chunked(x, dt.astype(xin.dtype), a, bmat, cmat, chunk=cfg.ssm_chunk)
         y = y + x * p["d_skip"][:, None].astype(x.dtype)
         y = y.reshape(b, s, di)
         new_cache = None
         if mode == "prefill":
-            def tail(r):
-                if s >= cw - 1:
-                    return r[:, s - (cw - 1) :, :]
-                return jnp.pad(r, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+            if lengths is None:
+                def tail(r):
+                    if s >= cw - 1:
+                        return r[:, s - (cw - 1) :, :]
+                    return jnp.pad(r, ((0, 0), (cw - 1 - s, 0), (0, 0)))
+            else:
+                # per-row true conv tails: the cw−1 pre-conv inputs ending
+                # at each row's last real token; rows shorter than the
+                # window left-fill with zeros (matching init_ssm_cache)
+                idx = (jnp.asarray(lengths, jnp.int32)[:, None]
+                       - (cw - 1) + jnp.arange(cw - 1)[None, :])  # (B, cw-1)
+
+                def tail(r):
+                    take = jnp.take_along_axis(
+                        r, jnp.maximum(idx, 0)[:, :, None], axis=1
+                    )
+                    return jnp.where((idx >= 0)[:, :, None], take,
+                                     jnp.zeros((), r.dtype))
 
             new_cache = {"conv_x": tail(xr), "conv_b": tail(br), "conv_c": tail(cr),
                          "state": hfinal}

@@ -68,6 +68,7 @@ import numpy as np
 from repro import solvers
 from repro.core import health as _health
 from repro.core import refine as _refine
+from repro.core.factorization import Factorization
 from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
 from repro.core.solve import split_rhs, stack_rhs
@@ -256,7 +257,10 @@ class SolveService:
     @staticmethod
     def _factor_tier(factors) -> float:
         """The accuracy tier a factor object belongs to: the residual its
-        producing backend guarantees (rank-k factors), 0.0 for exact."""
+        producing backend guarantees (rank-k factors), 0.0 for exact.
+        Factorization artifacts carry their tier as metadata."""
+        if isinstance(factors, Factorization):
+            return factors.tier
         return RAND_LU_RESIDUAL_BOUND if isinstance(factors, RankKFactors) else 0.0
 
     def _factors_for(self, req: SolveRequest, tolerance: float):
@@ -275,8 +279,13 @@ class SolveService:
         # ops before anything reaches the LRU — unhealthy factors are never
         # admitted (success past the screen *is* the admission check).
         if req.bw:
+            # enrich at factor time: the banded serve steady state is
+            # many solves per factor, so the pre-inverted blocks pay for
+            # themselves and every cache hit solves via the two-phase
+            # inverted path with zero layout work.
             factors = kops.banded_lu(
-                req.a, bw=req.bw, tolerance=tolerance, health=self.health
+                req.a, bw=req.bw, tolerance=tolerance, health=self.health,
+                enrich=True,
             )
         elif req.rank is not None:
             factors = kops.lu(
@@ -286,6 +295,11 @@ class SolveService:
             factors = kops.lu(req.a, tolerance=tolerance, health=self.health)
         if self.health:
             factors, _record = factors  # screened ops return (factors, health)
+        if isinstance(factors, Factorization):
+            # stamp the cache identity on the artifact — a future consumer
+            # (or a re-submitted artifact) carries its own fingerprint and
+            # never needs the matrix bytes re-hashed or re-screened.
+            factors = factors.with_meta(fingerprint=req.fp)
         self._lru.setdefault(req.fp, {})[self._factor_tier(factors)] = factors
         self._lru.move_to_end(req.fp)
         while len(self._lru) > self.cache_entries:

@@ -38,6 +38,15 @@ class Problem:
                  default in ``registry.VERIFY_RESIDUAL_DEFAULT_BOUND``) as a
                  dispatch failure — feeding the escalation funnel instead of
                  returning a silently-wrong answer.
+    ``enriched``  for solve ops: whether the factor operand is a
+                 :class:`repro.core.factorization.Factorization` carrying
+                 its factor-time enrichments (pre-inverted diagonal blocks).
+                 The inverted-diagonal solve backends gate on it, so a raw
+                 legacy operand is never steered into an
+                 enrich-on-the-fly dispatch by a measured cache row.
+                 Defaults True (the steady-state serving operand is an
+                 enriched artifact); ``from_arrays`` downgrades it for raw
+                 arrays.  Deliberately NOT part of the autotune cache key.
     """
 
     op: str
@@ -50,6 +59,7 @@ class Problem:
     devices: int = 1
     tolerance: float = 0.0
     verify_residual: bool = False
+    enriched: bool = True
 
     def __post_init__(self):
         if self.op not in OPS:
@@ -99,6 +109,7 @@ class Problem:
             # RHS ranks: (n,) / (n, m) unbatched, (B, n) / (B, n, m) batched
             rhs_ndim_vec = 1 + (1 if structure.startswith("batched_") else 0)
             rhs = 1 if b.ndim == rhs_ndim_vec else int(b.shape[-1])
+        enriched = bool(getattr(a, "enriched", False)) if op == "solve" else True
         return cls(
             op=op,
             structure=structure,
@@ -110,4 +121,5 @@ class Problem:
             devices=int(devices),
             tolerance=float(tolerance),
             verify_residual=bool(verify_residual),
+            enriched=enriched,
         )

@@ -149,8 +149,13 @@ def ebv_preconditioned(
     the registry's static/measured choice that is the batched Pallas grid
     kernel (:mod:`repro.kernels.batched_lu`), one grid program per
     parameter-factor system, instead of the per-leaf pure-jnp reference
-    this optimizer used to unroll.  ``solver_impl`` forces a backend (e.g.
-    ``"xla"`` for the vmapped mirror).
+    this optimizer used to unroll.  Eager calls factor each group with
+    ``enrich=True``, so the dispatch carries a batched
+    :class:`~repro.core.factorization.Factorization` artifact and the
+    substitution runs the inverted-diagonal backend (one batched GEMM per
+    block row instead of per-system triangular recurrences).
+    ``solver_impl`` forces a backend (e.g. ``"xla"`` for the vmapped
+    mirror).
 
     ``solve_tolerance`` opens the registry's approximate solver tiers for
     the preconditioner solves: a float is passed through as the largest
@@ -247,7 +252,7 @@ def ebv_preconditioned(
             )
             x3 = kops.linear_solve(
                 a3, r3, impl=solver_impl, block=min(solver_block, n),
-                tolerance=solve_tol,
+                tolerance=solve_tol, enrich=True,
             )
             for j, (i, _, r) in enumerate(items):
                 solved[i] = x3[j, :, : r.shape[1]]

@@ -1,0 +1,183 @@
+"""Factorization-artifact tests: the factor→solve contract.
+
+* factor entry points return a solve-ready :class:`Factorization` (packed
+  factors + factor-time diagonal-block inverses + layout/tier metadata);
+* the Pallas inverted-diagonal kernels and their pure-jnp mirrors are
+  bitwise twins across {n, bw, batch};
+* legacy raw-ndarray operands still flow through every solve entry point
+  (one-release shim);
+* the solve service caches the artifact itself — a cache hit performs zero
+  factor/health dispatches (asserted via registry dispatch hooks);
+* stacked-RHS solves match per-request solves column-for-column.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.core import make_diagonally_dominant
+from repro.core import factorization as fz
+from repro.core.banded import make_banded_dd
+from repro.kernels import banded as kbanded
+from repro.kernels import ops as kops
+from repro.kernels import trsm as ktrsm
+from repro.serve.solve_service import SolveService, fingerprint
+
+
+# ---------------------------------------------------------------------------
+# artifact contract
+# ---------------------------------------------------------------------------
+def test_dense_factor_returns_artifact():
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), 96)
+    art = kops.lu(a, enrich=True)
+    assert isinstance(art, fz.Factorization)
+    assert art.structure == "dense" and art.enriched and not art.batched
+    assert art.linv is not None and art.uinv is not None
+    # ndarray duck-typing shim: legacy consumers see the packed factors
+    assert art.shape == (96, 96) and art.ndim == 2
+    np.testing.assert_array_equal(np.asarray(art), np.asarray(art.packed))
+
+
+def test_banded_factor_returns_artifact():
+    n, bw = 256, 8
+    g = make_banded_dd(jax.random.PRNGKey(0), n, bw)
+    art = kops.banded_lu(g, bw=bw, enrich=True)
+    assert isinstance(art, fz.Factorization)
+    assert art.structure == "banded" and art.bw == bw and art.enriched
+    assert art.tlo is not None and art.tup is not None
+
+
+def test_unenriched_artifact_carries_no_inverses():
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), 96)
+    art = kops.lu(a)
+    assert isinstance(art, fz.Factorization) and not art.enriched
+    assert art.linv is None
+    # ensure-enriched shim upgrades it on demand, idempotently
+    full = fz.dense_artifact(art)
+    assert full.enriched and fz.dense_artifact(full) is full
+
+
+# ---------------------------------------------------------------------------
+# kernel ≡ mirror, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bw", [(128, 4), (384, 8), (256, 16)])
+def test_banded_inverted_kernel_mirror_bitwise(n, bw):
+    g = make_banded_dd(jax.random.PRNGKey(n), n, bw)
+    art = kops.banded_lu(g, bw=bw, enrich=True)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    k = kbanded.banded_solve_inverted(
+        art.linv, art.uinv, art.tlo, art.tup, b, n=n, bw=bw)
+    m = fz.banded_inverted_solve(
+        art.linv, art.uinv, art.tlo, art.tup, b, n=n, bw=bw)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(m))
+
+
+@pytest.mark.parametrize("n", [96, 256])
+def test_dense_inverted_kernel_mirror_bitwise(n):
+    a = make_diagonally_dominant(jax.random.PRNGKey(n), n)
+    art = kops.lu(a, enrich=True)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n, 8))
+    k = ktrsm.solve_inverted(art.packed, art.linv, art.uinv, b)
+    m = fz.dense_inverted_solve(art.packed, art.linv, art.uinv, b,
+                                block=art.block)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(m))
+
+
+def test_batched_artifact_solve():
+    bsz, n = 4, 96
+    a3 = jnp.stack([make_diagonally_dominant(jax.random.PRNGKey(i), n)
+                    for i in range(bsz)])
+    art = kops.lu(a3, enrich=True)
+    assert isinstance(art, fz.Factorization) and art.batched and art.enriched
+    b3 = jax.random.normal(jax.random.PRNGKey(9), (bsz, n, 8))
+    x3 = kops.lu_solve(art, b3)
+    for i in range(bsz):
+        resid = jnp.linalg.norm(a3[i] @ x3[i] - b3[i]) / jnp.linalg.norm(b3[i])
+        assert float(resid) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# legacy-array shim (one release)
+# ---------------------------------------------------------------------------
+def test_lu_solve_accepts_legacy_packed_array():
+    n = 96
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), n)
+    art = kops.lu(a, enrich=True)
+    raw = jnp.asarray(np.asarray(art.packed))  # a plain ndarray, no metadata
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x_raw = kops.lu_solve(raw, b)
+    resid = jnp.linalg.norm(a @ x_raw - b) / jnp.linalg.norm(b)
+    assert float(resid) < 1e-5
+
+
+def test_banded_solve_accepts_legacy_packed_array():
+    n, bw = 256, 8
+    g = make_banded_dd(jax.random.PRNGKey(0), n, bw)
+    art = kops.banded_lu(g, bw=bw, enrich=True)
+    raw = jnp.asarray(np.asarray(art.packed))
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x_art = kops.banded_solve(art, b, bw=bw, impl="xla_scalar")
+    x_raw = kops.banded_solve(raw, b, bw=bw, impl="xla_scalar")
+    np.testing.assert_array_equal(np.asarray(x_art), np.asarray(x_raw))
+
+
+def test_linear_solve_accepts_raw_operands():
+    n = 96
+    a = make_diagonally_dominant(jax.random.PRNGKey(0), n)
+    b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+    x = kops.linear_solve(a, b)
+    resid = jnp.linalg.norm(a @ x - b) / jnp.linalg.norm(b)
+    assert float(resid) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# solve-service round trip: the cache payload is the artifact
+# ---------------------------------------------------------------------------
+def test_service_cache_stores_artifact_and_hits_skip_screening():
+    n, bw = 512, 8
+    g = make_banded_dd(jax.random.PRNGKey(0), n, bw)
+    bs = [jax.random.normal(jax.random.PRNGKey(10 + i), (n,)) for i in range(3)]
+    svc = SolveService()
+
+    with solvers.record_dispatches() as cold:
+        x0 = svc.solve(g, bs[0], bw=bw)
+    assert sum(p.op == "factor" for p, _ in cold) == 1
+
+    # cached payload is the enriched artifact, stamped with the fingerprint
+    fp = fingerprint(g, bw=bw)
+    cached = svc._lru[fp][0.0]
+    assert isinstance(cached, fz.Factorization)
+    assert cached.enriched and cached.fingerprint == fp
+
+    # a hit re-derives NOTHING: no factor dispatch (health screening rides
+    # the factor dispatch, so zero factor dispatches == zero re-screens)
+    with solvers.record_dispatches() as warm:
+        x1 = svc.solve(g, bs[1], bw=bw)
+        x2 = svc.solve(g, bs[2], bw=bw)
+    assert sum(p.op == "factor" for p, _ in warm) == 0
+    assert sum(p.op == "solve" for p, _ in warm) == 2
+    assert svc.stats.cache_hits == 2
+
+    for b, x in zip(bs, (x0, x1, x2)):
+        ref = kops.banded_solve(cached, b, bw=bw)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# stacked-RHS ≡ per-request
+# ---------------------------------------------------------------------------
+def test_stacked_rhs_matches_per_request_solves():
+    n, bw, r = 512, 8, 16
+    g = make_banded_dd(jax.random.PRNGKey(0), n, bw)
+    art = kops.banded_lu(g, bw=bw, enrich=True)
+    bm = jax.random.normal(jax.random.PRNGKey(1), (n, r))
+    stacked = kops.banded_solve(art, bm, bw=bw, impl="pallas_inverted")
+    singles = jnp.stack(
+        [kops.banded_solve(art, bm[:, i], bw=bw, impl="pallas_inverted")
+         for i in range(r)], axis=1)
+    # NOT bitwise by design: the equalized RHS tiling batches the GEMMs at a
+    # width-dependent tile, which changes the reduction order in the last
+    # bits.  The columns must still agree to solver accuracy.
+    np.testing.assert_allclose(np.asarray(stacked), np.asarray(singles),
+                               rtol=2e-5, atol=1e-6)

@@ -128,14 +128,19 @@ def test_health_escalation_reaches_pivoted_last_resort():
 def test_demotion_never_reroutes_default_traffic():
     n = 72
     a = dd(n, 6)
+    # what an undisturbed default dispatch picks for this shape (static
+    # priority, or a measured-cache transfer — either way, the pre-demotion
+    # choice is the reference the demoted dispatch must still make)
+    undemoted = solvers.select(
+        solvers.Problem(op="factor", structure="dense", n=n)).name
     bad = a.at[0, 0].set(0.0)
     kops.lu(bad, health=True)  # demotes the no-pivot backends for this shape
     assert solvers.demotions()
     with solvers.record_dispatches() as log:
         f = kops.lu(a)  # plain unscreened call, same shape
-    assert log[0][1] == "pallas_fused"
+    assert log[0][1] == undemoted
     np.testing.assert_array_equal(
-        np.asarray(f), np.asarray(kops.lu(a, impl="pallas_fused"))
+        np.asarray(f), np.asarray(kops.lu(a, impl=undemoted))
     )
 
 

@@ -84,6 +84,34 @@ def test_prefill_decode_consistency(arch, arch_state):
     )
 
 
+@pytest.mark.parametrize("arch", ["mamba2_1_3b", "hymba_1_5b"])
+def test_masked_prefill_pad_invariance(arch, arch_state):
+    """Bucketed right-padding must not leak into the SSM state: ``lm.prefill``
+    with ``last=`` masks dt to exactly 0 on pad rows and gathers conv tails
+    at each row's true end.  Pure-SSM archs are bitwise-identical to the
+    unpadded prompt across bucket widths; hybrid archs are bitwise
+    pad-content-invariant at a fixed bucket (their attention sublayers
+    compile per shape, the same per-bucket determinism dense archs have)."""
+    cfg, params = arch_state(arch)
+    s0, pad = 21, 11
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, s0), 0, cfg.vocab_size)
+    last = jnp.asarray([s0 - 1], jnp.int32)
+
+    zero_pad = jnp.pad(tokens, ((0, 0), (0, pad)))
+    garbage = jax.random.randint(jax.random.PRNGKey(6), (1, pad), 0, cfg.vocab_size)
+    garbage_pad = jnp.concatenate([tokens, garbage], axis=1)
+    c1, l1 = lm.prefill(params, {"tokens": zero_pad}, cfg, last=last)
+    c2, l2 = lm.prefill(params, {"tokens": garbage_pad}, cfg, last=last)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    if cfg.family == "ssm":
+        # no attention sublayers → every cache leaf (conv tails, SSM state)
+        # is pad-independent, and the unpadded prompt matches bitwise too
+        for a, b in zip(jax.tree.leaves(c1), jax.tree.leaves(c2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        _, l0 = lm.prefill(params, {"tokens": tokens}, cfg, last=last)
+        np.testing.assert_array_equal(np.asarray(l0), np.asarray(l1))
+
+
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_output_shapes(arch, arch_state):
     cfg, params = arch_state(arch)
