@@ -148,13 +148,15 @@ def smoke(out_path: str | None = None) -> dict[str, float]:
         emit(f"opt_precond_b{nleaves}_n{d}_{impl}", t)
 
     # --- serving trajectory: decode host-sync fix (before/after), ragged
-    # continuous-batching throughput, and the solve service's factorization
-    # cache (serve_solve_cache_cached must beat _refactor >= 2x; gated in
-    # scripts/check.sh).
+    # continuous-batching throughput, the paged KV cache (capacity ratio +
+    # shared-prefix warm/cold, gated in scripts/check.sh), and the solve
+    # service's factorization cache (serve_solve_cache_cached must beat
+    # _refactor >= 2x; gated in scripts/check.sh).
     from . import serve_bench
 
     for name, t in serve_bench.run().items():
-        rows_us[name] = t * 1e6
+        # *_capacity rows are dimensionless ratios, not seconds
+        rows_us[name] = t if name.endswith("_capacity") else t * 1e6
 
     # --- accuracy tiers: the approximate backends' wall time AND measured
     # relative residual.  The ``*_residual`` companion rows are what

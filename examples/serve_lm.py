@@ -30,13 +30,32 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with shared-prefix reuse")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool size incl. scrap (0: derive from slots)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.bucket + args.new_tokens + cfg.num_prefix_embeds + 8
+    paged_kw = {}
+    if args.paged:
+        if args.bucket > 1 and args.page_size % args.bucket != 0:
+            ap.error(f"--page-size {args.page_size} must be a multiple of "
+                     f"--bucket {args.bucket} for shared-prefix reuse")
+        pages_per_req = -(-max_len // args.page_size)
+        if args.pool_pages and args.slots > (args.pool_pages - 1) // pages_per_req:
+            ap.error(
+                f"--slots {args.slots} exceeds what --pool-pages "
+                f"{args.pool_pages} can back (worst case {pages_per_req} "
+                "pages per request); lower --slots or raise --pool-pages")
+        paged_kw = dict(paged=True, page_size=args.page_size,
+                        pool_pages=args.pool_pages or None)
     eng = Engine(
-        params, cfg, slots=args.slots, bucket=args.bucket,
-        max_len=args.prompt_len + args.bucket + args.new_tokens + cfg.num_prefix_embeds + 8,
+        params, cfg, slots=args.slots, bucket=args.bucket, max_len=max_len,
+        **paged_kw,
     )
 
     rng = np.random.default_rng(0)
@@ -64,6 +83,11 @@ def main():
     print(f"dispatches: {st.prefill_dispatches} prefill + {st.decode_dispatches} decode "
           f"({st.tokens_per_dispatch:.2f} tok/dispatch); "
           f"padding waste {100*st.padding_frac:.1f}%")
+    if args.paged:
+        print(f"page pool: peak {st.pool_peak_pages}/{eng.pool.capacity} pages of "
+              f"{eng.page_size}; page waste {100*st.page_frac:.1f}%; "
+              f"prefix reuse {st.prefix_hits} hits / {st.prefix_hit_tokens} tokens "
+              "(second serve is warm)")
     print("sample continuation:", outs[0][len(reqs[0].tokens):].tolist())
 
     # --- the other serving workload: one matrix, many right-hand sides ---

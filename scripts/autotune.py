@@ -154,6 +154,55 @@ def run_width_sweep(cache, level: str, iters: int) -> dict:
     return measured
 
 
+def run_page_size_sweep(cache, level: str, iters: int) -> dict:
+    """Measure a small ragged paged-serve workload at each candidate KV page
+    size and persist per-size µs into the cache (``record_page_sizes``) —
+    consumed by ``Engine._default_page_size``.  Page size trades gather
+    granularity (small pages: more page-table walks per decode) against
+    internal fragmentation (large pages: partially-filled tails), so the
+    optimum is container-specific and worth a measurement."""
+    import numpy as np
+
+    import jax
+
+    from benchmarks.common import time_call
+    from repro.configs.base import get_config
+    from repro.models import lm
+    from repro.serve.engine import Engine, GenRequest
+    from repro.solvers import Problem
+
+    cfg = get_config("llama3_8b").reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    max_len = 64
+    lens, news = [5, 11, 7, 14], [8, 3, 6, 4]
+    reqs = [
+        GenRequest(tokens=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+                   max_new_tokens=n, seed=i)
+        for i, (s, n) in enumerate(zip(lens, news))
+    ]
+    sizes = (8, 16, 32) if level != "full" else (4, 8, 16, 32)
+    page_us = {}
+    for pg in sizes:
+        eng = Engine(params, cfg, max_len=max_len, slots=4, bucket=4,
+                     paged=True, page_size=pg, prefix_reuse=False)
+        # each sample is a whole serve() (multiple dispatches), so the
+        # median steadies at fewer iters than the single-kernel shootouts
+        page_us[int(pg)] = time_call(
+            lambda e=eng: e.serve(reqs), iters=min(iters, 3)
+        ) * 1e6
+    problem = Problem(op="decode", structure="paged_kv", n=max_len,
+                      dtype=jax.numpy.dtype(cfg.dtype).name)
+    cache.record_page_sizes(problem, page_us)
+    best = min(page_us, key=page_us.get)
+    print(
+        "decode/paged_kv page-size sweep: "
+        + "  ".join(f"pg{p}={v:,.0f}us" for p, v in sorted(page_us.items()))
+        + f"  -> {best}"
+    )
+    return page_us
+
+
 def run(level: str, out: str | None, iters: int) -> dict:
     import jax
 
@@ -185,6 +234,7 @@ def run(level: str, out: str | None, iters: int) -> dict:
             + f"  -> {winner}"
         )
     run_width_sweep(cache, level, iters)
+    run_page_size_sweep(cache, level, iters)
     cache.save(path)
     print(f"wrote {len(cache.entries)} entries to {path}", file=sys.stderr)
     return measured

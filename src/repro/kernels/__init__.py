@@ -3,4 +3,4 @@
 ``<name>.py`` kernels + ``ops.py`` jit'd wrappers + ``ref.py`` numpy oracles.
 Validated in interpret mode on CPU; target is TPU v5e Mosaic.
 """
-from . import ebv_lu, trsm, banded, ops, ref  # noqa: F401
+from . import ebv_lu, trsm, banded, ops, paged_attn, ref  # noqa: F401

@@ -1,0 +1,128 @@
+"""Pallas kernel: paged-KV decode attention — the serving engine's gather path.
+
+The paged serving engine stores each slot's KV cache as fixed-size pages
+scattered through a shared pool (``repro.serve.paged.PagePool``) instead of
+one dense ``(max_len)`` row per slot.  Decode attention must therefore
+*resolve the page table inside the kernel*: one grid program per batch row
+walks the row's page table, gathers its pages into a contiguous
+``(num_pages * page_size)`` KV view, and runs exactly the single-chunk
+masked-softmax math of :func:`repro.models.common.attention`.
+
+Like every kernel in this package it ships with a pure-jnp mirror
+(:func:`paged_decode_attention_ref`) it must match **bitwise**, and traces
+to exactly ONE ``pallas_call`` (asserted via
+``repro.utils.hlo.primitive_count`` in tests/test_paged.py).
+
+Bitwise contract with the dense decode path: the gathered view has the same
+length as the dense cache row (``num_pages * page_size == max_len``), page
+slots past the row's live length are masked to ``MASK_VALUE`` whose
+``exp(MASK - m)`` underflows to exact 0, and unallocated page-table entries
+(``-1``) gather zeros — so a paged serve is bitwise-identical per request
+to a dense-slot serve (tests/test_paged.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.models.common import MASK_VALUE
+
+__all__ = ["paged_decode_attention", "paged_decode_attention_ref"]
+
+
+def _row_attention(q_row, ks, vs, length):
+    """Single-row decode attention: the exact op sequence of the single-chunk
+    branch of :func:`repro.models.common.attention` (b=1, sq=1), so the paged
+    path stays bitwise-identical to the dense engine's per-row attention.
+
+    q_row: (H, Dh); ks/vs: (Sc, KV, Dh); length: scalar int32 (live tokens).
+    Returns (H * Dh,) in q_row.dtype.
+    """
+    h, dh = q_row.shape
+    sc, kvh, _ = ks.shape
+    rep = h // kvh
+    qg = q_row.reshape(1, 1, kvh, rep, dh).transpose(0, 2, 3, 1, 4)
+    scale = dh**-0.5
+    s = jnp.einsum(
+        "bgrqd,bkgd->bgrqk", qg, ks[None], preferred_element_type=jnp.float32
+    )
+    s = s * scale
+    # contiguous paged rows: kv position j is valid iff j < length, which is
+    # exactly the dense path's (pos >= 0) & (pos <= cur) mask
+    mask = jnp.arange(sc, dtype=jnp.int32) < length
+    s = jnp.where(mask[None, None, None, None, :], s, MASK_VALUE)
+    m = jnp.maximum(s.max(-1), -1e25)
+    p = jnp.exp(s - m[..., None])
+    out = jnp.einsum("bgrqk,bkgd->bgrqd", p.astype(vs.dtype), vs[None])
+    out = out / jnp.maximum(p.sum(-1), 1e-30)[..., None].astype(out.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(1, 1, h * dh)
+    return out[0, 0].astype(q_row.dtype)
+
+
+def _paged_attn_kernel(q_ref, pt_ref, len_ref, kp_ref, vp_ref, o_ref, *, num_row_pages: int):
+    """One batch row: gather the row's pages, then single-chunk attention.
+
+    q_ref (1, H, Dh); pt_ref (1, NP) int32 page table row (−1 = unallocated);
+    len_ref (1, 1) int32; kp/vp_ref (P, page, KV, Dh) full pool; o (1, H·Dh).
+    """
+    full = (slice(None), slice(None), slice(None))
+    ks_parts, vs_parts = [], []
+    for j in range(num_row_pages):
+        pid = pt_ref[0, j]
+        safe = jnp.maximum(pid, 0)
+        pk = pl.load(kp_ref, (pl.dslice(safe, 1),) + full)[0]
+        pv = pl.load(vp_ref, (pl.dslice(safe, 1),) + full)[0]
+        hole = pid < 0
+        ks_parts.append(jnp.where(hole, jnp.zeros_like(pk), pk))
+        vs_parts.append(jnp.where(hole, jnp.zeros_like(pv), pv))
+    ks = jnp.concatenate(ks_parts, axis=0)  # (NP * page, KV, Dh)
+    vs = jnp.concatenate(vs_parts, axis=0)
+    o_ref[0] = _row_attention(q_ref[0], ks, vs, len_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    page_table: jax.Array, lengths: jax.Array, *, interpret: bool | None = None,
+) -> jax.Array:
+    """Decode attention over a paged KV pool; grid over the batch.
+
+    q: (B, H, Dh) current-token queries; k_pages/v_pages: (P, page, KV, Dh)
+    shared page pool; page_table: (B, NP) int32, −1 = unallocated slot;
+    lengths: (B,) int32 live tokens per row (the current position + 1).
+    Returns (B, H * Dh) attention outputs in q.dtype.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    b, h, dh = q.shape
+    p, page, kvh, _ = k_pages.shape
+    np_ = page_table.shape[1]
+    lens2 = jnp.asarray(lengths, jnp.int32).reshape(b, 1)
+    return pl.pallas_call(
+        functools.partial(_paged_attn_kernel, num_row_pages=np_),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((p, page, kvh, dh), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((p, page, kvh, dh), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h * dh), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h * dh), q.dtype),
+        interpret=interpret,
+    )(q, page_table, lens2, k_pages, v_pages)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Pure-jnp mirror of :func:`paged_decode_attention` (bitwise twin)."""
+    b, np_ = page_table.shape
+    page, kvh, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    safe = jnp.maximum(page_table, 0)
+    hole = (page_table < 0)[..., None, None, None]
+    ks = jnp.where(hole, 0, k_pages[safe]).reshape(b, np_ * page, kvh, dh)
+    vs = jnp.where(hole, 0, v_pages[safe]).reshape(b, np_ * page, kvh, dh)
+    return jax.vmap(_row_attention)(q, ks, vs, jnp.asarray(lengths, jnp.int32))

@@ -25,6 +25,13 @@ def main():
                     help=">0 enables per-slot sampled decoding")
     ap.add_argument("--seed", type=int, default=0,
                     help="base sampling seed (request i uses seed+i)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with shared-prefix reuse")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="page-pool size incl. the reserved scrap page "
+                         "(0: slots * pages-per-slot + 1)")
     args = ap.parse_args()
 
     if args.devices:
@@ -61,8 +68,41 @@ def main():
         ))
     max_len = args.prompt_len + args.bucket + args.new_tokens + cfg.num_prefix_embeds + 8
 
+    paged_kw = {}
+    if args.paged:
+        if args.page_size % args.bucket != 0 and args.bucket > 1:
+            ap.error(
+                f"--page-size {args.page_size} must be a multiple of "
+                f"--bucket {args.bucket}: shared-prefix hits are only "
+                "bitwise-exact within one padded length, so page and "
+                "bucket boundaries must agree"
+            )
+        # worst-case pages one request can occupy, from the CLI's own
+        # request-shaping knobs — the same arithmetic the engine enforces
+        # per request at serve() time
+        worst = max_len
+        pages_per_req = -(-worst // args.page_size)
+        if args.pool_pages:
+            cap = (args.pool_pages - 1) // pages_per_req
+            if cap < 1:
+                ap.error(
+                    f"--pool-pages {args.pool_pages} cannot hold even one "
+                    f"request (worst case {pages_per_req} pages of "
+                    f"{args.page_size}); need >= {pages_per_req + 1}"
+                )
+            if args.slots > cap:
+                ap.error(
+                    f"--slots {args.slots} exceeds the pool's worst-case "
+                    f"concurrency {cap} ({args.pool_pages - 1} usable pages "
+                    f"/ {pages_per_req} pages per request); lower --slots "
+                    "or raise --pool-pages"
+                )
+        paged_kw = dict(paged=True, page_size=args.page_size,
+                        pool_pages=args.pool_pages or None)
+
     def serve():
-        eng = Engine(params, cfg, max_len=max_len, slots=args.slots, bucket=args.bucket)
+        eng = Engine(params, cfg, max_len=max_len, slots=args.slots,
+                     bucket=args.bucket, **paged_kw)
         t0 = time.perf_counter()
         outs = eng.serve(reqs)
         return eng, outs, time.perf_counter() - t0
@@ -82,6 +122,12 @@ def main():
           f"({st.tokens_per_dispatch:.2f} tok/dispatch)")
     print(f"padding waste: {100*st.padding_frac:.1f}% of prompt tokens "
           f"(bucket={args.bucket})")
+    if args.paged:
+        print(f"page pool: peak {st.pool_peak_pages}/{eng.pool.capacity} pages "
+              f"of {eng.page_size} ({st.peak_active} slots at peak); "
+              f"page waste {100*st.page_frac:.1f}%")
+        print(f"prefix reuse: {st.prefix_hits} warm admissions, "
+              f"{st.prefix_hit_tokens} prompt tokens skipped")
     print(f"sample: {outs[0][len(reqs[0].tokens):].tolist()}")
 
 

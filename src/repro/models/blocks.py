@@ -49,9 +49,14 @@ def init_block(key, cfg: ModelConfig, *, encoder: bool = False):
 def apply_block(
     p, x, cfg: ModelConfig, *, positions, mode="train", cache=None,
     enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None,
-    lengths=None,
+    lengths=None, page_table=None, prior=None, raw_kv=False,
 ):
-    """One decoder layer.  Returns (x, new_cache, aux)."""
+    """One decoder layer.  Returns (x, new_cache, aux).
+
+    ``page_table`` / ``prior`` / ``raw_kv`` feed the paged-serving variants
+    of the attention sublayer (see ``common.apply_attention_layer``); SSM
+    and cross-attention caches stay per-slot dense.
+    """
     aux = jnp.zeros((), jnp.float32)
     fam = cfg.family
     new_cache = {}
@@ -62,6 +67,7 @@ def apply_block(
             p["attn"], h, cfg, positions=positions, mode=mode,
             cache=None if cache is None else cache["attn"], kv_chunk=kv_chunk,
             cache_len=cache_len, seq_positions=seq_positions,
+            page_table=page_table, prior=prior, raw_kv=raw_kv,
         )
         if ac is not None:
             new_cache["attn"] = ac
@@ -101,6 +107,7 @@ def apply_block(
             p["attn"], h, cfg, positions=positions, mode=mode,
             cache=None if cache is None else cache["attn"], kv_chunk=kv_chunk,
             cache_len=cache_len, seq_positions=seq_positions,
+            page_table=page_table, prior=prior, raw_kv=raw_kv,
         )
         ssm_out, sc = M.apply_ssm_layer(
             p["ssm"], h, cfg, mode=mode,

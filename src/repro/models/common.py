@@ -397,6 +397,7 @@ def _attention_tri(qg, k, v, *, q_positions, kv_positions, window, chunk, scale)
 def apply_attention_layer(
     p, x, cfg: ModelConfig, *, positions, mode="train", cache=None,
     cache_len=None, kv_chunk=1024, seq_positions=None,
+    page_table=None, prior=None, raw_kv=False,
 ):
     """Full attention sublayer: qkv proj → rope → (cache update) → attention
     → out proj.  Returns (out, new_cache).
@@ -409,6 +410,21 @@ def apply_attention_layer(
     batch slot may sit at a different depth — the substrate of the serving
     engine's continuous batching.  Sliding-window archs use a ring buffer of
     ``Sc == window`` slots.
+
+    Paged serving variants:
+
+    * decode against a **paged** cache ``{"k_pages","v_pages":
+      (P, page, KV, Dh)}`` — ``page_table`` (B, NP) int32 maps each row's
+      logical page index to a pool page (idle rows hold 0, the scrap
+      page); the page walk and gather happen inside ONE Pallas kernel
+      (``repro.kernels.paged_attn``), bitwise-identical to the dense row
+      attention above.
+    * warm shared-prefix prefill: ``prior`` = {"k","v": (B, Sp, KV, Dh)}
+      already-computed prefix K/V — fresh rows (positions offset by Sp at
+      the caller) attend over (prior ++ fresh).
+    * ``raw_kv=True`` returns the fresh K/V verbatim ({"k","v"}) instead
+      of a dense ``_build_cache`` row, so the engine can scatter it into
+      pool pages.
     """
     b, s, _ = x.shape
     h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
@@ -431,7 +447,20 @@ def apply_attention_layer(
 
         mesh = _sh.active_mesh()
         sched = cfg.attention_schedule
-        if (
+        if prior is not None:
+            # warm shared-prefix prefill: fresh rows (already offset to
+            # positions Sp..Sp+s−1) attend over (cached prefix ++ fresh)
+            pk, pv = prior["k"].astype(k.dtype), prior["v"].astype(v.dtype)
+            sp = pk.shape[1]
+            kvpos = jnp.concatenate(
+                [jnp.arange(sp, dtype=jnp.int32), pos1d.astype(jnp.int32)]
+            )
+            out = attention(
+                q, jnp.concatenate([pk, k], axis=1), jnp.concatenate([pv, v], axis=1),
+                q_positions=pos1d, kv_positions=kvpos,
+                causal=True, window=cfg.sliding_window, kv_chunk=kv_chunk,
+            )
+        elif (
             sched == "ebv" and mesh is not None and "model" in mesh.axis_names
             and s == k.shape[1] and s % (2 * mesh.shape["model"]) == 0
         ):
@@ -447,7 +476,28 @@ def apply_attention_layer(
             )
         new_cache = None
         if mode == "prefill":
-            new_cache = _build_cache(cfg, k, v, pos1d, cache_len or s)
+            if raw_kv:
+                new_cache = {"k": k, "v": v}
+            else:
+                new_cache = _build_cache(cfg, k, v, pos1d, cache_len or s)
+    elif mode == "decode" and "k_pages" in cache:
+        kp, vp = cache["k_pages"], cache["v_pages"]
+        page = kp.shape[1]
+        np_ = page_table.shape[1]
+        cur = (tpos[0] if tpos.ndim > 1 else tpos).astype(jnp.int32)
+        cur = jnp.broadcast_to(cur, (b,))
+        pidx = jnp.clip(cur // page, 0, np_ - 1)
+        pi = jnp.take_along_axis(page_table, pidx[:, None], axis=1)[:, 0]
+        # idle rows point at page 0 (scrap); clamp any −1 hole there too so
+        # stale writes from retired slots never touch a live page
+        pi = jnp.maximum(pi, 0)
+        off = cur % page
+        kp = kp.at[pi, off].set(k[:, 0].astype(kp.dtype))
+        vp = vp.at[pi, off].set(v[:, 0].astype(vp.dtype))
+        from repro.kernels.paged_attn import paged_decode_attention
+
+        out = paged_decode_attention(q[:, 0], kp, vp, page_table, cur + 1)[:, None]
+        new_cache = {"k_pages": kp, "v_pages": vp}
     elif mode == "decode":
         sc = cache["k"].shape[1]
         # per-row current positions: (B,) — rows advance independently

@@ -143,13 +143,24 @@ def _embed_inputs(params, batch, cfg: ModelConfig, *, mode):
 # ---------------------------------------------------------------------------
 def _scan_blocks(params, x, cfg: ModelConfig, *, positions, mode, caches=None,
                  enc_out=None, kv_chunk=1024, cache_len=None, seq_positions=None,
-                 lengths=None):
+                 lengths=None, page_table=None, prior=None, raw_kv=False):
+    # scan xs: block params, plus (when present) per-layer caches and the
+    # per-layer prior prefix K/V ({"k","v"} stacked on a leading layer axis)
     def body(x, xs):
-        bp, cache = xs if caches is not None else (xs, None)
+        cache = prior_l = None
+        if caches is not None and prior is not None:
+            bp, cache, prior_l = xs
+        elif caches is not None:
+            bp, cache = xs
+        elif prior is not None:
+            bp, prior_l = xs
+        else:
+            bp = xs
         x, new_cache, aux = B.apply_block(
             bp, x, cfg, positions=positions, mode=mode, cache=cache,
             enc_out=enc_out, kv_chunk=kv_chunk, cache_len=cache_len,
             seq_positions=seq_positions, lengths=lengths,
+            page_table=page_table, prior=prior_l, raw_kv=raw_kv,
         )
         x = constrain(x, ACT_AXES)
         return x, (new_cache, aux)
@@ -162,7 +173,12 @@ def _scan_blocks(params, x, cfg: ModelConfig, *, positions, mode, caches=None,
         body_fn = jax.checkpoint(body, policy=policy)
     else:
         body_fn = body
-    xs = params["blocks"] if caches is None else (params["blocks"], caches)
+    xs_list = [params["blocks"]]
+    if caches is not None:
+        xs_list.append(caches)
+    if prior is not None:
+        xs_list.append(prior)
+    xs = xs_list[0] if len(xs_list) == 1 else tuple(xs_list)
     x, (new_caches, auxs) = jax.lax.scan(body_fn, x, xs, unroll=flags.scan_unroll())
     return x, new_caches, jnp.sum(auxs)
 
@@ -219,16 +235,30 @@ def train_loss(params, batch, cfg: ModelConfig, *, kv_chunk=1024, aux_weight=0.0
     return ce + aux_weight * aux, metrics
 
 
-def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, last=None):
+def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, last=None,
+            prior=None, raw_kv=False):
     """Full-sequence forward building the decode cache; returns
     (caches, last-token logits).
 
     ``last`` (optional, (B,) int32): per-row index of the token whose logits
     to return instead of the trailing position — the serving engine prefills
     right-padded shape-bucketed prompts and samples from each request's true
-    last token (causality keeps those logits untouched by the pad tail)."""
+    last token (causality keeps those logits untouched by the pad tail).
+
+    ``prior`` (optional): layer-stacked {"k","v": (L, B, Sp, KV, Dh)} —
+    already-computed K/V for a shared prompt prefix of Sp tokens.  The rows
+    in ``batch`` are then the prompt *suffix*: positions are offset by Sp
+    and attention runs over (prior ++ fresh).  Dense-family only (position
+    streams are plain sequence indices).  ``raw_kv=True`` returns each
+    layer's fresh K/V verbatim (for the paged engine to scatter into pool
+    pages) instead of dense cache rows; ``last`` indices stay in suffix
+    coordinates."""
     x, positions, _, enc_out = _embed_inputs(params, batch, cfg, mode="prefill")
     seq_pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if prior is not None:
+        sp = prior["k"].shape[2]
+        positions = positions + sp
+        seq_pos = seq_pos + sp
     x = constrain(x, ACT_AXES)
     seq = x.shape[1]
     # per-row true lengths (from the serving engine's last= gather) make the
@@ -238,7 +268,7 @@ def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, l
     x, caches, _ = _scan_blocks(
         params, x, cfg, positions=positions, mode="prefill", enc_out=enc_out,
         kv_chunk=kv_chunk, cache_len=cache_len, seq_positions=seq_pos,
-        lengths=lengths,
+        lengths=lengths, prior=prior, raw_kv=raw_kv,
     )
     x = C.apply_norm(params["ln_f"], x, cfg.norm)
     if last is None:
@@ -250,12 +280,16 @@ def prefill(params, batch, cfg: ModelConfig, *, cache_len=None, kv_chunk=1024, l
     return caches, logits
 
 
-def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig, *, page_table=None):
     """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (lockstep —
     every row at the same depth) or (B,) int32 per-row positions (continuous
     batching: each slot advances independently); caches: per-layer-stacked
     pytree from :func:`prefill` / :func:`init_caches`.  Returns
-    (new_caches, logits (B, 1, V))."""
+    (new_caches, logits (B, 1, V)).
+
+    With a paged cache (:func:`init_paged_caches`), ``page_table`` (B, NP)
+    int32 maps each row's logical pages to pool pages; the attention
+    sublayer resolves it inside one Pallas gather kernel per layer."""
     emb = params["embed"]
     x = jnp.take(emb, tokens, axis=0)
     b = x.shape[0]
@@ -276,7 +310,7 @@ def decode_step(params, caches, tokens, pos, cfg: ModelConfig):
     seq_pos = pos
     x, new_caches, _ = _scan_blocks(
         params, x, cfg, positions=positions, mode="decode", caches=caches,
-        seq_positions=seq_pos,
+        seq_positions=seq_pos, page_table=page_table,
     )
     x = C.apply_norm(params["ln_f"], x, cfg.norm)
     logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"], preferred_element_type=jnp.float32)
@@ -287,6 +321,27 @@ def init_caches(cfg: ModelConfig, batch: int, seq_len: int, *, enc_len: int = 0,
     """Per-layer-stacked empty cache pytree (for decode-only dry-runs)."""
     dtype = dtype or jnp.dtype(cfg.dtype)
     one = B.init_block_cache(cfg, batch, seq_len, dtype, enc_len=enc_len)
+    return jax.tree.map(lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_pages: int, page_size: int,
+                      *, enc_len: int = 0, dtype=None):
+    """Layer-stacked cache pytree with the attention K/V held as a shared
+    page pool ``(L, num_pages, page_size, KV, Dh)`` instead of per-slot rows.
+    Non-attention cache parts (SSM state, encdec cross K/V) stay per-slot
+    dense — only the token-indexed KV grows with sequence length.  Sliding
+    -window archs are not pageable (the ring layout is position-modular)."""
+    if cfg.sliding_window is not None:
+        raise ValueError("paged KV cache does not support sliding-window archs")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    one = B.init_block_cache(cfg, batch, page_size, dtype, enc_len=enc_len)
+    if "attn" not in one:
+        raise ValueError(f"family {cfg.family!r} has no attention KV cache to page")
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    one["attn"] = {
+        "k_pages": jnp.zeros((num_pages, page_size, kv, dh), dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, kv, dh), dtype),
+    }
     return jax.tree.map(lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), one)
 
 

@@ -3,10 +3,13 @@
 * :mod:`repro.serve.scheduler` — shape-bucketed queue, EBV-equalized slot
   filling, deadline/FIFO ordering, padding stats;
 * :mod:`repro.serve.engine` — slot-based prefill/decode generation engine;
+* :mod:`repro.serve.paged` — paged KV-cache page pool, prompt-prefix
+  fingerprint chains, and the refcounted shared-prefix cache;
 * :mod:`repro.serve.solve_service` — factor-once/solve-many linear-system
   service with an LRU factorization cache and coalesced multi-RHS solves.
 """
 from .engine import Engine, EngineStats, GenRequest  # noqa: F401
+from .paged import PagePool, PrefixCache, prefix_chain  # noqa: F401
 from .scheduler import Scheduler, bucket_length  # noqa: F401
 from .solve_service import (  # noqa: F401
     DeadlineMiss,

@@ -27,6 +27,31 @@ temperature>0 outputs are also independent of batch composition.
 
 ``generate`` is kept as the lockstep-compatible wrapper: one slot per
 prompt row, exact-length buckets, per-row seeds ``seed + i``.
+
+**Paged mode** (``paged=True``): slots no longer own dense ``(max_len)``
+KV rows — the attention cache is a shared pool of fixed-size pages
+(:mod:`repro.serve.paged`), each slot holds a page table, and the decode
+page walk happens inside one Pallas gather kernel per layer
+(:mod:`repro.kernels.paged_attn`).  Capacity becomes O(live tokens)
+instead of O(slots × max_len).  The two jitted entry points are
+unchanged in kind: ``_prefill`` gains an optional prior-prefix K/V input
+(warm shared-prefix admission skips recomputing cached pages) and
+``_decode`` takes the page table as a plain device array, so admissions
+and retirements never recompile anything.  Prefix sharing is refcounted
+and read-only: only *full* prompt pages strictly before the first decode
+-write position are shared, so a shared page is never written and
+copy-on-write is structural (a divergent prompt stops matching the
+fingerprint chain at its first divergent block and recomputes its tail
+into pages it owns).  When the pool runs dry, admission *queues* —
+``Scheduler.restore`` puts the batch back — rather than corrupting live
+pages.
+
+**EOS early exit**: requests carrying ``eos_token`` keep a device-side
+done flag + truncation index next to the ``(slots, max_new)`` output
+buffer; flags are polled every ``eos_poll`` decode steps (one tiny
+transfer, no per-token host sync) and finished slots retire early,
+freeing their pages mid-stream.  The final readback stays ONE transfer
+per request (output row ++ truncation index, fetched together).
 """
 from __future__ import annotations
 
@@ -38,6 +63,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
+from .paged import PagePool, PrefixCache, prefix_chain
 from .scheduler import Scheduler, bucket_length
 
 __all__ = ["GenRequest", "EngineStats", "Engine"]
@@ -54,6 +80,9 @@ class GenRequest:
     temperature: float = 0.0
     seed: int = 0
     deadline: float | None = None
+    # stop early when this token is sampled (output truncates at and
+    # includes it); None keeps the fixed max_new_tokens budget
+    eos_token: int | None = None
 
 
 @dataclasses.dataclass
@@ -66,6 +95,14 @@ class EngineStats:
     # order — tests assert prefill insertion happens mid-decode from this
     events: list = dataclasses.field(default_factory=list)
     sched: object | None = None  # SchedulerStats of the last serve() call
+    # paged mode
+    prefix_hits: int = 0        # admissions that reused >= 1 cached page
+    prefix_hit_tokens: int = 0  # prompt tokens whose prefill was skipped
+    page_frac: float = 0.0      # partial-last-page fragmentation (sched)
+    peak_active: int = 0        # max concurrently-occupied slots
+    pool_peak_pages: int = 0    # engine-lifetime peak pool occupancy
+    # EOS early exit
+    early_exits: int = 0        # slots retired before their token budget
 
     @property
     def tokens_per_dispatch(self) -> float:
@@ -76,23 +113,156 @@ class Engine:
     def __init__(
         self, params, cfg: ModelConfig, *, max_len: int = 512, slots: int = 4,
         bucket: int = 1, jit_kwargs: dict | None = None,
+        paged: bool = False, page_size: int | None = None,
+        pool_pages: int | None = None, prefix_reuse: bool = True,
+        eos_poll: int = 4,
     ):
         self.params = params
         self.cfg = cfg
-        self.max_len = max_len
         self.slots = slots
         self.bucket = bucket
+        self.paged = paged
+        self.eos_poll = max(int(eos_poll), 1)
         self.stats = EngineStats()
         kw = jit_kwargs or {}
 
-        def _prefill(params, batch, last):
-            return lm.prefill(params, batch, cfg, cache_len=max_len, last=last)
+        if paged:
+            if cfg.sliding_window is not None:
+                raise ValueError(
+                    "paged KV cache does not support sliding-window archs "
+                    "(the ring layout is position-modular, pages are not)"
+                )
+            if cfg.family == "ssm":
+                raise ValueError(
+                    "pure-SSM archs have no attention KV cache to page"
+                )
+            page_size = int(page_size or self._default_page_size(max_len))
+            if page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            if prefix_reuse and cfg.family == "dense" and bucket > 1 and page_size % bucket != 0:
+                raise ValueError(
+                    f"prefix sharing needs page_size ({page_size}) to be a "
+                    f"multiple of bucket ({bucket}) so a shared prefix plus "
+                    "a bucketed tail reproduces the cold bucket length; pass "
+                    "prefix_reuse=False to page without sharing"
+                )
+            self.page_size = page_size
+            self.max_len = -(-max_len // page_size) * page_size
+            self.pages_per_slot = self.max_len // page_size
+            self.pool = PagePool(
+                pool_pages or slots * self.pages_per_slot + 1, page_size
+            )
+            # prefix K/V is only bitwise-reproducible for plain sequence
+            # positions with no prompt offset — dense family exactly
+            self.prefix_cache = (
+                PrefixCache(self.pool)
+                if prefix_reuse and cfg.family == "dense" else None
+            )
+            self._pages = None  # persistent {"k_pages","v_pages"} device arrays
 
-        def _decode(params, caches, tokens, pos):
-            return lm.decode_step(params, caches, tokens, pos, cfg)
+            def _prefill(params, batch, last, prior):
+                return lm.prefill(params, batch, cfg, last=last, prior=prior, raw_kv=True)
+
+            def _decode(params, caches, tokens, pos, page_table):
+                return lm.decode_step(
+                    params, caches, tokens, pos, cfg, page_table=page_table
+                )
+        else:
+            self.max_len = max_len
+            self.pool = None
+            self.prefix_cache = None
+
+            def _prefill(params, batch, last):
+                return lm.prefill(params, batch, cfg, cache_len=self.max_len, last=last)
+
+            def _decode(params, caches, tokens, pos):
+                return lm.decode_step(params, caches, tokens, pos, cfg)
 
         self._prefill = jax.jit(_prefill, **kw)
         self._decode = jax.jit(_decode, donate_argnums=(1,), **kw)
+
+    def _default_page_size(self, max_len: int) -> int:
+        """Autotuned page size when `scripts/autotune.py` has measured a
+        transferable sweep (op="decode", structure="paged_kv"); 16 outside
+        measured territory."""
+        try:
+            from repro.solvers.cache import get_cache
+            from repro.solvers.problem import Problem
+
+            best = get_cache().best_page_size(
+                Problem(
+                    op="decode", structure="paged_kv", n=max_len,
+                    dtype=jnp.dtype(self.cfg.dtype).name,
+                )
+            )
+            if best:
+                return int(best)
+        except Exception:
+            pass
+        return 16
+
+    def paged_capacity_slots(self, pages_per_request: int | None = None) -> int:
+        """How many concurrent slots the pool can back if every request
+        needs ``pages_per_request`` pages (worst case: a full slot)."""
+        per = pages_per_request or self.pages_per_slot
+        return max(self.pool.capacity // max(per, 1), 0)
+
+    # ------------------------------------------------------------------
+    # paged-cache helpers
+    # ------------------------------------------------------------------
+    def _request_pages(self, s0: int, lb: int, max_new: int) -> int:
+        """Pages a request occupies end-to-end: the padded prefill width or
+        the final sequence length, whichever rounds to more pages."""
+        off = self._prompt_offset
+        return -(-max(lb + off, s0 + off + max_new) // self.page_size)
+
+    def _paged_caches(self, nslots: int, enc_len: int):
+        """Fresh per-serve cache pytree over the persistent page pool: the
+        K/V pool arrays survive across serve() calls (prefix-cache hits read
+        pages written by earlier calls); per-slot parts (SSM state, cross
+        K/V) are rebuilt for the current slot count."""
+        caches = lm.init_paged_caches(
+            self.cfg, nslots, self.pool.num_pages, self.page_size, enc_len=enc_len
+        )
+        if self._pages is not None:
+            caches["attn"] = dict(self._pages)
+        return caches
+
+    def _gather_prior(self, caches, pages: list[int]):
+        """Assemble the prior-prefix K/V (L, 1, Sp, KV, Dh) for a warm
+        prefill from the hit pool pages (read-only gather)."""
+        idx = jnp.asarray(pages, jnp.int32)
+        kp = caches["attn"]["k_pages"]  # (L, NP, pg, KV, Dh)
+        nl, _, pg, kv, dh = kp.shape
+
+        def sel(pool):
+            return pool[:, idx].reshape(nl, 1, len(pages) * pg, kv, dh)
+
+        return {"k": sel(kp), "v": sel(caches["attn"]["v_pages"])}
+
+    def _scatter_pages(self, caches, raw, pages: list[int]):
+        """Write fresh prefill K/V ({"k","v"}: (L, 1, S, KV, Dh)) into pool
+        ``pages`` (page j of the suffix → pages[j]).  Pad-position K/V past
+        the true prompt is scattered too but never read: decode overwrites
+        position ``cur`` before attending with length ``cur + 1``."""
+        if not pages:
+            return caches
+        idx = jnp.asarray(pages, jnp.int32)
+        pg = self.page_size
+
+        def put(pool, fresh):
+            nl, _, s, kv, dh = fresh.shape
+            pad = len(pages) * pg - s
+            if pad:
+                fresh = jnp.pad(fresh, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            blocks = fresh.reshape(nl, len(pages), pg, kv, dh).astype(pool.dtype)
+            return pool.at[:, idx].set(blocks)
+
+        caches["attn"] = {
+            "k_pages": put(caches["attn"]["k_pages"], raw["k"]),
+            "v_pages": put(caches["attn"]["v_pages"], raw["v"]),
+        }
+        return caches
 
     # ------------------------------------------------------------------
     # request-shaping helpers
@@ -153,19 +323,38 @@ class Engine:
                 )
             lb = self._bucket_len(len(r.tokens), fixed_bucket)
             assert lb + offset + r.max_new_tokens <= self.max_len, "max_len too small"
+            if self.paged:
+                need = self._request_pages(len(r.tokens), lb, r.max_new_tokens)
+                if need > self.pool.capacity:
+                    raise ValueError(
+                        f"request needs {need} pages of {self.page_size} but the "
+                        f"pool only holds {self.pool.capacity}; raise pool_pages "
+                        f"to at least {need + 1} (one page is reserved scrap)"
+                    )
 
         sched = Scheduler()
         for i, r in enumerate(reqs):
             s0 = len(r.tokens)
             lb = self._bucket_len(s0, fixed_bucket)
+            chain = None
+            if self.paged and self.prefix_cache is not None:
+                # salt = the bucket length: prefix K/V is bitwise-exact only
+                # between prompts prefilled at the same padded length, so
+                # hits must never cross buckets (see paged.prefix_chain)
+                chain = prefix_chain(r.tokens, self.page_size, salt=f"lb={lb}")
             sched.submit(
                 (i, r), bucket=lb, cost=lb + r.max_new_tokens,
-                deadline=r.deadline, real=s0, padded=lb - s0,
+                deadline=r.deadline, real=s0, padded=lb - s0, prefix=chain,
             )
 
         self.stats = stats = EngineStats()
         enc_len = max((fixed_bucket or 0) // 4, 1) if self.cfg.family == "encdec" else 0
-        caches = lm.init_caches(self.cfg, nslots, self.max_len, enc_len=enc_len)
+        if self.paged:
+            caches = self._paged_caches(nslots, enc_len)
+            page_table = jnp.zeros((nslots, self.pages_per_slot), jnp.int32)
+        else:
+            caches = lm.init_caches(self.cfg, nslots, self.max_len, enc_len=enc_len)
+            page_table = None
         out_cap = max(r.max_new_tokens for r in reqs)
         tok = jnp.zeros((nslots, 1), jnp.int32)
         pos = jnp.zeros((nslots,), jnp.int32)
@@ -173,35 +362,126 @@ class Engine:
         temps = jnp.zeros((nslots,), jnp.float32)
         out_buf = jnp.zeros((nslots, out_cap), jnp.int32)
         out_idx = jnp.zeros((nslots,), jnp.int32)
+        # device-side EOS state: compared/updated inside the decode loop,
+        # polled (one tiny transfer) every eos_poll steps
+        any_eos = any(r.eos_token is not None for r in reqs)
+        eos_vec = jnp.full((nslots,), -1, jnp.int32)
+        done = jnp.zeros((nslots,), bool)
+        done_idx = jnp.full((nslots,), out_cap, jnp.int32)
+        eos_countdown = self.eos_poll
         active: list[dict | None] = [None] * nslots
         results: list[np.ndarray | None] = [None] * len(reqs)
 
         def finish(slot):
+            nonlocal page_table
             st = active[slot]
             r = reqs[st["rid"]]
-            new = np.asarray(out_buf[slot, : r.max_new_tokens])  # ONE transfer
+            if r.eos_token is not None:
+                # output row ++ truncation index, fetched together — still
+                # ONE transfer per request
+                packed = np.asarray(
+                    jnp.concatenate([out_buf[slot], done_idx[slot][None]])
+                )
+                n = min(int(packed[-1]), r.max_new_tokens)
+                new = packed[:n]
+            else:
+                n = r.max_new_tokens
+                new = np.asarray(out_buf[slot, :n])  # ONE transfer
             results[st["rid"]] = np.concatenate([np.asarray(r.tokens, np.int32), new])
-            stats.generated_tokens += r.max_new_tokens
+            stats.generated_tokens += n
+            if self.paged:
+                self.pool.release(st["pages"])
+                page_table = page_table.at[slot].set(
+                    jnp.zeros((self.pages_per_slot,), jnp.int32)  # → scrap
+                )
+                sched.stats.live_tokens += st["valid"] + n
+                sched.stats.page_tokens += len(st["pages"]) * self.page_size
             active[slot] = None
 
         while len(sched) or any(active):
             free = [s for s in range(nslots) if active[s] is None]
             if free and len(sched):
-                for sr in sched.take(len(free), equalize=equalize):
+                taken = sched.take(len(free), equalize=equalize)
+                while taken:
+                    sr = taken.pop(0)
                     slot = free.pop(0)
                     rid, r = sr.payload
                     s0 = len(r.tokens)
                     lb = self._bucket_len(s0, fixed_bucket)
-                    prompt = np.zeros((1, lb), np.int32)
-                    prompt[0, :s0] = np.asarray(r.tokens, np.int32)
-                    last = jnp.asarray([s0 + offset - 1], jnp.int32)
-                    new_caches, logits = self._prefill(
-                        self.params, self._model_batch(prompt), last
-                    )
+                    hit_pages: list[int] = []
+                    new_pages: list[int] = []
+                    prior = None
+                    if self.paged:
+                        if self.prefix_cache is not None and sr.prefix:
+                            # strictly-before-the-last-token limit keeps at
+                            # least one suffix token to prefill (the logits
+                            # source) — and, with the s0 // page insert limit
+                            # below, guarantees shared pages are never
+                            # decode-written (structural copy-on-write)
+                            hit_pages = self.prefix_cache.lookup(
+                                sr.prefix[: (s0 - 1) // self.page_size]
+                            )
+                        need = self._request_pages(s0, lb, r.max_new_tokens)
+                        need_new = need - len(hit_pages)
+                        new_pages = self.pool.alloc(need_new)
+                        if new_pages is None and self.prefix_cache is not None:
+                            self.prefix_cache.evict(need_new)
+                            new_pages = self.pool.alloc(need_new)
+                        if new_pages is None:
+                            # pool exhausted: queue the rest of the batch
+                            # rather than corrupting live pages
+                            if hit_pages:
+                                self.pool.release(hit_pages)
+                            if not any(a is not None for a in active):
+                                raise RuntimeError(
+                                    "page pool exhausted with no slot in "
+                                    "flight — per-request capacity was "
+                                    "checked upfront, so only the prefix "
+                                    "index can be pinning pages and evict() "
+                                    "should have freed it"
+                                )
+                            sched.restore([sr] + taken)
+                            free.insert(0, slot)
+                            break
+                    shared = len(hit_pages) * (self.page_size if self.paged else 0)
+                    if hit_pages:
+                        prior = self._gather_prior(caches, hit_pages)
+                        stats.prefix_hits += 1
+                        stats.prefix_hit_tokens += shared
+                    tail, tail_lb = s0 - shared, lb - shared
+                    prompt = np.zeros((1, tail_lb), np.int32)
+                    prompt[0, :tail] = np.asarray(r.tokens[shared:], np.int32)
+                    last = jnp.asarray([tail + offset - 1], jnp.int32)
+                    if self.paged:
+                        new_caches, logits = self._prefill(
+                            self.params, self._model_batch(prompt), last, prior
+                        )
+                    else:
+                        new_caches, logits = self._prefill(
+                            self.params, self._model_batch(prompt), last
+                        )
                     stats.prefill_dispatches += 1
                     stats.events.append(("prefill", rid))
                     valid = s0 + offset
-                    caches = _insert_slot(caches, new_caches, slot, valid)
+                    if self.paged:
+                        rest = dict(new_caches)
+                        attn_raw = rest.pop("attn")
+                        if rest:  # per-slot parts: SSM state, cross K/V
+                            live = {k2: caches[k2] for k2 in rest}
+                            caches.update(_insert_slot(live, rest, slot, valid))
+                        npg = -(-attn_raw["k"].shape[2] // self.page_size)
+                        caches = self._scatter_pages(caches, attn_raw, new_pages[:npg])
+                        row = hit_pages + new_pages
+                        row_np = np.zeros((self.pages_per_slot,), np.int32)
+                        row_np[: len(row)] = row
+                        page_table = page_table.at[slot].set(jnp.asarray(row_np))
+                        if self.prefix_cache is not None and sr.prefix:
+                            # full prompt pages only: decode writes start at
+                            # position s0, i.e. page >= s0 // page_size
+                            ins = s0 // self.page_size
+                            self.prefix_cache.insert(sr.prefix[:ins], row[:ins])
+                    else:
+                        caches = _insert_slot(caches, new_caches, slot, valid)
                     # split before first use (same key discipline the
                     # lockstep engine regression-tested): the root key is
                     # never consumed directly
@@ -217,15 +497,30 @@ class Engine:
                         jnp.zeros((out_cap,), jnp.int32).at[0].set(t0[0, 0])
                     )
                     out_idx = out_idx.at[slot].set(1)
+                    if any_eos:
+                        e = r.eos_token if r.eos_token is not None else -1
+                        eos_vec = eos_vec.at[slot].set(e)
+                        d0 = (t0[0, 0] == e) if e >= 0 else jnp.asarray(False)
+                        done = done.at[slot].set(d0)
+                        done_idx = done_idx.at[slot].set(jnp.where(d0, 1, out_cap))
                     active[slot] = {"rid": rid, "left": r.max_new_tokens - 1}
+                    if self.paged:
+                        active[slot]["pages"] = row
+                        active[slot]["valid"] = valid
                     if active[slot]["left"] == 0:
                         finish(slot)
                         free.insert(0, slot)
+            stats.peak_active = max(
+                stats.peak_active, sum(a is not None for a in active)
+            )
             if not any(active):
                 continue
             split2 = jax.vmap(lambda k: jax.random.split(k))(keys)  # (S, 2, 2)
             keys, subs = split2[:, 0], split2[:, 1]
-            caches, logits = self._decode(self.params, caches, tok, pos)
+            if self.paged:
+                caches, logits = self._decode(self.params, caches, tok, pos, page_table)
+            else:
+                caches, logits = self._decode(self.params, caches, tok, pos)
             stats.decode_dispatches += 1
             stats.events.append(("decode", sum(a is not None for a in active)))
             tok = self._sample(logits[:, -1], temps, subs)
@@ -234,13 +529,38 @@ class Engine:
             )(out_buf, tok[:, 0:1], out_idx)
             out_idx = out_idx + 1
             pos = pos + 1
+            if any_eos:
+                hit = (tok[:, 0] == eos_vec) & (eos_vec >= 0) & (~done)
+                done_idx = jnp.where(hit, out_idx, done_idx)
+                done = done | hit
             for slot in range(nslots):
                 if active[slot] is not None:
                     active[slot]["left"] -= 1
                     if active[slot]["left"] == 0:
                         finish(slot)
+            eos_countdown -= 1
+            if any_eos and eos_countdown <= 0:
+                eos_countdown = self.eos_poll
+                flags = np.asarray(done)  # one (slots,) bool transfer
+                for slot in range(nslots):
+                    if (
+                        active[slot] is not None
+                        and reqs[active[slot]["rid"]].eos_token is not None
+                        and flags[slot]
+                    ):
+                        stats.early_exits += 1
+                        finish(slot)
         stats.padding_frac = sched.stats.padding_frac
         stats.sched = sched.stats
+        if self.paged:
+            stats.page_frac = sched.stats.page_frac
+            stats.pool_peak_pages = self.pool.peak_used
+            # pool K/V persists across serve() calls: pages pinned by the
+            # prefix index stay readable for the next call's warm prefills
+            self._pages = {
+                "k_pages": caches["attn"]["k_pages"],
+                "v_pages": caches["attn"]["v_pages"],
+            }
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------

@@ -27,6 +27,21 @@ fair: a request can be overtaken at most once before it is in the front
 Padding accounting: the caller reports real vs padded sizes at submission
 (``real=``, ``padded=``); ``stats.padding_frac`` is the fraction of
 dispatched prompt tokens that were bucket padding.
+
+**Page-granular equalized filling** (paged serving engine): with a paged KV
+cache the unit of slot occupancy is the fixed-size *page*, not the dense
+``max_len`` row — the same equalization the paper applies to elimination
+vectors, applied to storage: every allocation is page-shaped, so the fold
+pick mixes page-heavy and page-light requests exactly as it mixes
+long/short-lived occupants, and the pool fills uniformly with no
+per-slot reservation.  Requests carry their prompt's page-block
+fingerprint chain in ``ScheduledRequest.prefix`` (computed once at
+submission — ``repro.serve.paged.prefix_chain``), so the engine's
+admission step can map shared leading pages to refcounted pool pages and
+skip the shared part of the prefill.  Two fragmentation axes are
+reported: ``padding_frac`` (bucket padding inside the prefill dispatch)
+and ``page_frac`` (internal fragmentation of partially-filled last pages,
+from the engine's ``live_tokens`` / ``page_tokens`` accounting).
 """
 from __future__ import annotations
 
@@ -59,6 +74,9 @@ class ScheduledRequest:
     seq: int = 0
     real: int = 0
     padded: int = 0
+    # prompt page-block fingerprint chain (list of digests) for paged
+    # shared-prefix admission; None for non-paged traffic
+    prefix: Any = None
 
     @property
     def priority(self) -> tuple:
@@ -72,11 +90,24 @@ class SchedulerStats:
     real_tokens: int = 0
     padding_tokens: int = 0
     equalized_picks: int = 0
+    # paged-engine fragmentation accounting (filled at slot retirement):
+    # live_tokens = tokens a request actually occupied, page_tokens = the
+    # page-rounded allocation that backed them
+    live_tokens: int = 0
+    page_tokens: int = 0
 
     @property
     def padding_frac(self) -> float:
         tot = self.real_tokens + self.padding_tokens
         return self.padding_tokens / tot if tot else 0.0
+
+    @property
+    def page_frac(self) -> float:
+        """Internal fragmentation: fraction of allocated page slots left
+        empty by partially-filled last pages (0.0 for dense serving)."""
+        if not self.page_tokens:
+            return 0.0
+        return (self.page_tokens - self.live_tokens) / self.page_tokens
 
 
 class Scheduler:
@@ -97,10 +128,11 @@ class Scheduler:
         deadline: float | None = None,
         real: int = 0,
         padded: int = 0,
+        prefix: Any = None,
     ) -> ScheduledRequest:
         req = ScheduledRequest(
             payload=payload, bucket=bucket, cost=cost, deadline=deadline,
-            seq=next(self._seq), real=real, padded=padded,
+            seq=next(self._seq), real=real, padded=padded, prefix=prefix,
         )
         self._queue.append(req)
         self.stats.submitted += 1

@@ -152,6 +152,25 @@ class AutotuneCache:
         )
         return entry
 
+    def record_page_sizes(self, problem: Problem, page_us: dict[int, float]) -> dict:
+        """Merge KV-cache page-size timings (page size → measured paged-serve
+        µs at that size) into ``problem``'s entry (op="decode",
+        structure="paged_kv", n=max_len).  Consumed by
+        :meth:`best_page_size` — the serving engine's default page size."""
+        key = _problem_key(problem)
+        for e in self.entries:
+            if _entry_key(e) == key:
+                entry = e
+                break
+        else:
+            entry = dict(zip(_KEY_FIELDS, key))
+            entry["times_us"] = {}
+            self.entries.append(entry)
+        entry.setdefault("page_us", {}).update(
+            {str(int(p)): round(float(v), 2) for p, v in page_us.items()}
+        )
+        return entry
+
     # -- lookup -------------------------------------------------------------
     def lookup(self, problem: Problem) -> dict | None:
         key = _problem_key(problem)
@@ -198,6 +217,16 @@ class AutotuneCache:
             wu = e.get("width_us")
             if wu:
                 return int(min(wu, key=lambda w: wu[w] / int(w)))
+        return None
+
+    def best_page_size(self, problem: Problem) -> int | None:
+        """Measured-fastest KV page size for the nearest matching paged-serve
+        sweep, or None when nothing transferable was measured — the engine
+        falls back to its built-in default."""
+        for _, e in self._matches(problem):
+            pu = e.get("page_us")
+            if pu:
+                return int(min(pu, key=pu.get))
         return None
 
 

@@ -15,8 +15,8 @@ import jax.numpy as jnp
 
 __all__ = ["Problem", "OPS", "STRUCTURES"]
 
-OPS = ("factor", "solve", "linear_solve")
-STRUCTURES = ("dense", "banded", "batched_dense", "batched_banded")
+OPS = ("factor", "solve", "linear_solve", "decode")
+STRUCTURES = ("dense", "banded", "batched_dense", "batched_banded", "paged_kv")
 
 
 @dataclasses.dataclass(frozen=True)
