@@ -16,6 +16,9 @@ Rows (all ``us_per_call``):
   the paged engine sustains at the same KV-cache HBM budget as a 4-slot
   dense engine, divided by 4.  Short requests occupy pages, not max_len
   rows, so the ratio is >> 1; gated >= 2x by scripts/check.sh.
+* ``serve_sharded_capacity`` — DIMENSIONLESS: the same workload through the
+  4-shard paged engine (per-shard pools + slot pinning); partitioning the
+  pool must not cost capacity, gated >= 2x by scripts/check.sh.
 * ``serve_paged_prefix_cold`` / ``serve_paged_prefix_warm`` — one long
   -prompt request against a cold vs primed shared-prefix cache; warm
   admission maps the cached pages and prefills only the prompt tail.
@@ -115,6 +118,21 @@ def run(smoke: bool = True) -> dict[str, float]:
     rows["serve_paged_capacity"] = ratio  # dimensionless ratio, NOT seconds
     emit("serve_paged_capacity", ratio / 1e6,  # emit() multiplies by 1e6
          f"{peng.stats.peak_active}req@{pool - 1}pages_vs_{dense_slots}dense")
+
+    # Mesh-sharded layout at the same *allocatable* page budget: the 12
+    # usable pages split into 4 per-shard pools of 3 (+1 scrap page per
+    # shard instead of one globally), slots pinned block-wise to shards.
+    # Capacity must not shrink when the pool is partitioned — the scheduler
+    # spreads admissions so no shard's 3 pages become the bottleneck.
+    shards = 4
+    seng = Engine(params, cfg, max_len=16, slots=12, bucket=4,
+                  paged=True, page_size=16, pool_pages=4 * shards,
+                  shards=shards, prefix_reuse=False)
+    seng.serve(short)
+    sratio = seng.stats.peak_active / dense_slots
+    rows["serve_sharded_capacity"] = sratio  # dimensionless ratio, NOT seconds
+    emit("serve_sharded_capacity", sratio / 1e6,
+         f"{seng.stats.peak_active}req@{shards}x3pages_vs_{dense_slots}dense")
 
     # Long prompt + large pages: the cold admission is dominated by the
     # 1920-token prefill (~130 ms on this container) while the shared step

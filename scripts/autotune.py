@@ -11,6 +11,8 @@ never disagree about who won a shootout.  The cache path follows
     python scripts/autotune.py --smoke            # CI: small sizes, seconds
     python scripts/autotune.py                    # default grid
     python scripts/autotune.py --full             # paper-scale sizes (slow)
+    python scripts/autotune.py --devices 8        # + SPIKE-vs-replicated sweep
+                                                  #   (forces 8 host devices)
 
 Smoke sizes and the 4x nearest-size transfer window are chosen together so
 that a seeded cache can never flip the *observable* behaviour the unit
@@ -203,7 +205,67 @@ def run_page_size_sweep(cache, level: str, iters: int) -> dict:
     return page_us
 
 
-def run(level: str, out: str | None, iters: int) -> dict:
+def run_devices_sweep(cache, level: str, iters: int, devices: int) -> dict:
+    """SPIKE-vs-replicated shootout for ``devices > 1`` banded problems.
+
+    Runs both backends over a real ``(devices,)`` mesh (``mesh=`` routes the
+    spike backend through its shard_map'd kernel entry, and the replicated
+    backend through the same devices=1 re-dispatch the funnel falls back to)
+    and records the timings under the exact ``(n, bw, devices)`` cache key —
+    the measured selection ``repro.solvers`` consults before trusting
+    spike's static priority."""
+    import jax
+
+    from benchmarks.common import time_shootout
+    from repro.core.banded import make_banded_dd
+    from repro.core.spike import spike_supported
+    from repro.launch.mesh import make_mesh
+    from repro.solvers import Problem, candidates
+
+    if len(jax.devices()) < devices:
+        print(
+            f"devices sweep skipped: {len(jax.devices())} device(s) visible, "
+            f"need {devices} (set --devices before jax initializes)",
+            file=sys.stderr,
+        )
+        return {}
+    mesh = make_mesh((devices,), ("model",))
+    shapes = [(2048, 8), (16384, 16)] if level == "full" else [(2048, 8)]
+    measured = {}
+    for n, bw in shapes:
+        if not spike_supported(n, bw, devices):
+            print(f"devices sweep: n={n} bw={bw} devices={devices} "
+                  f"unsupported (2*bw > ceil(n/devices)), skipped")
+            continue
+        arow = make_banded_dd(jax.random.PRNGKey(n), n, bw)
+        b = jax.random.normal(jax.random.PRNGKey(1), (n,))
+        for problem, arrays in (
+            (Problem(op="factor", structure="banded", n=n, bw=bw,
+                     devices=devices), (arow,)),
+            (Problem(op="linear_solve", structure="banded", n=n, bw=bw,
+                     rhs=1, devices=devices), (arow, b)),
+        ):
+            cands = [c for c in candidates(problem) if c.autotune]
+            if len(cands) < 2:
+                continue
+            fns = {
+                c.name: functools.partial(c.call, problem, bw=bw, mesh=mesh)
+                for c in cands
+            }
+            times = time_shootout(fns, *arrays, iters=iters)
+            times_us = {name: t * 1e6 for name, t in times.items()}
+            cache.record(problem, times_us)
+            winner = min(times_us, key=times_us.get)
+            measured[problem] = times_us
+            print(
+                f"{problem.op}/banded n={n} bw={bw} devices={devices}: "
+                + "  ".join(f"{k}={v:,.0f}us" for k, v in sorted(times_us.items()))
+                + f"  -> {winner}"
+            )
+    return measured
+
+
+def run(level: str, out: str | None, iters: int, devices: int = 1) -> dict:
     import jax
 
     from benchmarks.common import time_shootout
@@ -235,6 +297,8 @@ def run(level: str, out: str | None, iters: int) -> dict:
         )
     run_width_sweep(cache, level, iters)
     run_page_size_sweep(cache, level, iters)
+    if devices > 1:
+        run_devices_sweep(cache, level, iters, devices)
     cache.save(path)
     print(f"wrote {len(cache.entries)} entries to {path}", file=sys.stderr)
     return measured
@@ -246,9 +310,19 @@ def main() -> None:
     ap.add_argument("--full", action="store_true", help="paper-scale sizes (slow)")
     ap.add_argument("--out", default=None, help="cache file (default: resolved cache path)")
     ap.add_argument("--iters", type=int, default=5, help="shootout samples per backend")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="also sweep SPIKE vs replicated over this many "
+                         "devices (forces host devices when fewer are visible)")
     args = ap.parse_args()
+    if args.devices > 1:
+        # must land before the first jax import (all imports here are lazy):
+        # the host platform's device count is locked at backend init
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
     level = "smoke" if args.smoke else ("full" if args.full else "default")
-    run(level, args.out, args.iters)
+    run(level, args.out, args.iters, devices=args.devices)
 
 
 if __name__ == "__main__":

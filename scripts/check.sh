@@ -9,7 +9,9 @@
 #      followed by a bench/dispatch consistency assert (the registry's auto
 #      choice for the banded solve must equal the measured BENCH winner),
 #      the serving gates (serve_* rows present; solve-service factorization
-#      cache >= 2x over re-factorization) and the cross-PR perf gate
+#      cache >= 2x over re-factorization; paged + sharded capacity ratios),
+#      the multi-device SPIKE gate (spike_d8 vs replicated on the same
+#      emulated mesh, SPIKE_MAX_RATIO) and the cross-PR perf gate
 #      (scripts/perf_compare.py --bench: fail on >1.5x regression of any
 #      key present in the previous snapshot).
 # tests/conftest.py forces the deterministic 8-host-device XLA environment.
@@ -80,6 +82,16 @@ cap = rows["serve_paged_capacity"]
 assert cap >= cap_bound, (
     f"paged capacity ratio {cap:.2f}x < {cap_bound}x the dense slot count")
 print(f"paged capacity at equal HBM: {cap:.1f}x dense (bound {cap_bound}x)")
+# sharded-serve acceptance: partitioning the pool into per-shard pools
+# (disjoint page ranges, slot pinning, one scrap page per shard) must not
+# cost concurrent capacity — the shard-balanced scheduler has to keep every
+# shard's pages drawing even load
+scap_bound = float(os.environ.get("SHARDED_CAPACITY_MIN_RATIO", "2.0"))
+scap = rows["serve_sharded_capacity"]
+assert scap >= scap_bound, (
+    f"sharded capacity ratio {scap:.2f}x < {scap_bound}x the dense slot "
+    f"count — per-shard pool partitioning is costing concurrency")
+print(f"sharded capacity at equal pages: {scap:.1f}x dense (bound {scap_bound}x)")
 warm_bound = float(os.environ.get("PAGED_WARM_MIN_RATIO", "3.0"))
 warm = rows["serve_paged_prefix_cold"] / rows["serve_paged_prefix_warm"]
 assert warm >= warm_bound, (
@@ -93,7 +105,10 @@ print(f"shared-prefix warm vs cold prefill: {warm:.1f}x (bound {warm_bound}x)")
 from benchmarks.run import SMOKE_BANDED_N, SMOKE_BANDED_BW
 from repro.solvers import Problem, select
 prefix = f"banded_solve_n{SMOKE_BANDED_N}_"
-measured = {k[len(prefix):]: v for k, v in rows.items() if k.startswith(prefix)}
+# the spike_d8 row is a multi-device measurement — not a candidate for the
+# single-device dispatch pick below
+measured = {k[len(prefix):]: v for k, v in rows.items()
+            if k.startswith(prefix) and not k[len(prefix):].startswith("spike")}
 winner = min(measured, key=measured.get)
 picked = select(Problem(op="solve", structure="banded",
                         n=SMOKE_BANDED_N, bw=SMOKE_BANDED_BW, rhs=1)).name
@@ -116,17 +131,47 @@ assert inv <= ratio_bound * ref, (
 print(f"banded_solve pallas_inverted/xla_scalar: {inv / ref:.2f}x "
       f"(bound {ratio_bound}x)")
 
+# multi-device crown: the SPIKE split substitution against the replicated
+# path on the same emulated 8-device mesh.  The bench times SPIKE under 8
+# forced host devices on this container's single core, where the d
+# per-device local solves serialize — so its wall clock is held to
+# SPIKE_MAX_RATIO x (d x the best single-device substitution), which is
+# exactly what the replicated path (every device substituting all n rows)
+# costs on the same mesh.  The ratio therefore bounds SPIKE's
+# reduced-system + tip-gather overhead over a perfect d-way split.
+spike_devices = 8
+spike_bound = float(os.environ.get("SPIKE_MAX_RATIO", "1.5"))
+spike_row = f"{prefix}spike_d{spike_devices}"
+assert spike_row in rows, (
+    f"smoke bench wrote no {spike_row} row to BENCH_kernels.json "
+    f"(the 8-device subprocess measurement failed)")
+spike_budget = spike_bound * spike_devices * inv
+assert rows[spike_row] <= spike_budget, (
+    f"SPIKE split solve ({rows[spike_row]:.0f}us) > {spike_bound}x the "
+    f"replicated cost on the same mesh ({spike_devices}x pallas_inverted "
+    f"= {spike_devices * inv:.0f}us)")
+print(f"banded_solve spike_d{spike_devices}/(d x pallas_inverted): "
+      f"{rows[spike_row] / (spike_devices * inv):.2f}x (bound {spike_bound}x)")
+
 # accuracy gate: every approximate tier's measured residual must stay
 # within the bound its backend declares to the selection funnel — an
 # accuracy drift past the advertised tier fails CI here, at bench scale,
 # not just in toy-size unit tests
 from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
 accuracy_gates = {
-    "lu_n1024_bf16_ir_residual": 1e-5,  # the tolerance the bench requested
-    "rand_lu_n2048_k256_residual": RAND_LU_RESIDUAL_BOUND,
+    # (bound, required): the rand_lu rows ride only with --smoke --full —
+    # the chaos drill above already holds that tier to the same bound on
+    # every run, so its bench-scale gate is present-conditional
+    "lu_n1024_bf16_ir_residual": (1e-5, True),  # the tolerance the bench requested
+    "rand_lu_n2048_k256_residual": (RAND_LU_RESIDUAL_BOUND, False),
 }
-for row, bound in accuracy_gates.items():
-    assert row in rows, f"smoke bench wrote no {row} row to BENCH_kernels.json"
+for row, (bound, required) in accuracy_gates.items():
+    if row not in rows:
+        assert not required, (
+            f"smoke bench wrote no {row} row to BENCH_kernels.json")
+        print(f"accuracy gate skipped: {row} absent "
+              f"(--smoke --full row; chaos drill covers the tier)")
+        continue
     assert rows[row] <= bound, (
         f"approximate tier exceeded its declared bound: "
         f"{row}={rows[row]:.3e} > {bound:.1e}")

@@ -54,6 +54,7 @@ from repro.core import health as _chealth
 from repro.core.factorization import Factorization, factorize_banded, factorize_dense
 from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
+from repro.core.spike import SpikeFactors
 
 __all__ = [
     "lu",
@@ -145,7 +146,8 @@ def _as_artifact(packed, *, structure: str, bw: int = 0, block=None,
     (the new factor→solve contract).  Special factor layouts (pivoted,
     rank-k), traced values (artifacts are a Python-level cache object) and
     already-wrapped results pass through unchanged."""
-    if isinstance(packed, (Factorization, PivotedFactors, RankKFactors, jax.core.Tracer)):
+    if isinstance(packed, (Factorization, PivotedFactors, RankKFactors,
+                           SpikeFactors, jax.core.Tracer)):
         return packed
     if packed.ndim > 3:  # deep-batched stacks stay raw (no batched enrichment)
         return packed
@@ -561,6 +563,8 @@ def banded_lu(
     tolerance: float = 0.0,
     health=None,
     enrich: bool = False,
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> jax.Array:
     """Packed band LU on the row-aligned band (no pivoting).  ``tolerance``
     keys selection/cache like the dense ops (no approximate banded tier
@@ -574,7 +578,14 @@ def banded_lu(
     artifact (array-duck-typed shim over the packed band); ``enrich=True``
     pre-inverts the (C, C) diagonal blocks and pre-couples the off-band
     strips at factor time, unlocking the two-phase inverted-diagonal solve
-    (``banded_solve`` impl ``"pallas_inverted"``)."""
+    (``banded_solve`` impl ``"pallas_inverted"``).
+
+    With ``mesh=`` the band spans ``mesh.shape[mesh_axis]`` devices: the
+    registry's multi-device banded slot selects between the SPIKE split
+    solver (:mod:`repro.core.spike` — returns a
+    :class:`~repro.core.spike.SpikeFactors` artifact) and the replicated
+    fallback, with ``health=`` screening feeding the escalation funnel so
+    an operand outside SPIKE's class demotes to replication."""
     thresholds = _screen(health)
     ref_max = jnp.max(jnp.abs(arow)) if thresholds is not None else None
 
@@ -586,6 +597,27 @@ def banded_lu(
         _health_validator(thresholds, ref_max, bw=bw)
         if thresholds is not None and eager else None
     )
+    if mesh is not None and mesh.shape[mesh_axis] > 1:
+        if impl not in (None, "spike", "replicated"):
+            raise ValueError(
+                f"impl={impl!r} is a single-device backend and cannot honour "
+                "mesh=; only 'spike'/'replicated' span devices "
+                "(drop mesh= or impl=)"
+            )
+        problem = _sol().Problem.from_arrays(
+            "factor", arow, bw=bw, devices=mesh.shape[mesh_axis],
+            tolerance=tolerance,
+        )
+        out = _sol().dispatch(
+            problem, arow, impl=impl, validate=validate,
+            bw=bw, block=block, interpret=interpret, mesh=mesh, axis=mesh_axis,
+        )
+        rec = None if thresholds is None else _record(out)
+        # SpikeFactors pass _as_artifact unchanged; a replicated (local)
+        # factor wraps into the ordinary Factorization artifact.
+        out = _as_artifact(out, structure="banded", bw=bw, block=block,
+                           tier=tolerance, health_rec=rec, enrich=enrich)
+        return out if thresholds is None else (out, rec)
     if arow.ndim >= 3:
         lead, tail = arow.shape[:-2], arow.shape[-2:]
         out = _banded_lu_batched(
@@ -644,6 +676,8 @@ def banded_solve(
     rhs_tile: int = 256,
     interpret: bool | None = None,
     tolerance: float = 0.0,
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> jax.Array:
     """Forward+backward substitution on packed band factors.
 
@@ -655,6 +689,27 @@ def banded_solve(
     :class:`Factorization` operand additionally admits the two-phase
     inverted-diagonal path (``"pallas_inverted"``), which wins the n=16384
     shootout outright on this container."""
+    if isinstance(lu_band, SpikeFactors):
+        # split-band factors from banded_lu(mesh=...) — only the spike
+        # backend can consume them, so this is a forced dispatch by
+        # construction (the pivoted / rank-k pattern).  ``mesh=`` runs the
+        # local g-solves shard_map'd; without it the mirror loop runs.
+        problem = _sol().Problem(
+            op="solve", structure="banded", n=lu_band.n,
+            dtype=jnp.dtype(lu_band.dtype).name, bw=lu_band.bw,
+            rhs=1 if b.ndim == 1 else int(b.shape[-1]),
+            devices=lu_band.devices, tolerance=float(tolerance),
+        )
+        return _sol().dispatch(
+            problem, lu_band, b, impl="spike",
+            bw=lu_band.bw, block=block, interpret=interpret,
+            mesh=mesh, axis=mesh_axis,
+        )
+    if mesh is not None and mesh.shape[mesh_axis] > 1:
+        raise ValueError(
+            "banded_solve(mesh=...) expects SpikeFactors from "
+            "banded_lu(mesh=...); local factors solve without a mesh"
+        )
     if isinstance(lu_band, Factorization):
         # bypass the custom_vmap wrapper — see lu_solve
         if lu_band.ndim >= 3:
@@ -703,6 +758,8 @@ def banded_linear_solve(
     interpret: bool | None = None,
     tolerance: float = 0.0,
     verify_residual: bool = False,
+    mesh=None,
+    mesh_axis: str = "model",
 ) -> jax.Array:
     """Banded factor + solve with ``impl`` routed to BOTH phases (the same
     contract :func:`linear_solve` honours): ``"xla*"`` factor impls solve
@@ -710,7 +767,28 @@ def banded_linear_solve(
     blocked solve kernel.  ``solve_impl`` overrides the solve phase.
     ``verify_residual=True`` gates eager results on the relative residual
     like :func:`linear_solve` (there is no banded pivoted fallback, so a
-    miss raises :class:`repro.solvers.SolveFailure` directly)."""
+    miss raises :class:`repro.solvers.SolveFailure` directly).
+
+    With ``mesh=`` the fused multi-device banded slot selects SPIKE vs
+    replication (measured cache keyed on ``devices``, static priorities
+    otherwise); ``verify_residual=True`` then runs inside the registry
+    funnel, so a SPIKE residual miss demotes to the replicated path."""
+    if mesh is not None and mesh.shape[mesh_axis] > 1:
+        if impl not in (None, "spike", "replicated"):
+            raise ValueError(
+                f"impl={impl!r} is a single-device backend and cannot honour "
+                "mesh=; only 'spike'/'replicated' span devices "
+                "(drop mesh= or impl=)"
+            )
+        problem = _sol().Problem.from_arrays(
+            "linear_solve", arow, b[..., None] if b.ndim == 1 else b,
+            bw=bw, devices=mesh.shape[mesh_axis], tolerance=tolerance,
+            verify_residual=verify_residual,
+        )
+        return _sol().dispatch(
+            problem, arow, b, impl=impl,
+            bw=bw, block=block, interpret=interpret, mesh=mesh, axis=mesh_axis,
+        )
     if solve_impl is None and impl is not None:
         solve_impl = impl if impl in ("xla", "xla_scalar") else "pallas"
     lub = banded_lu(arow, bw=bw, impl=impl, block=block, interpret=interpret,

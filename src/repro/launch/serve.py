@@ -32,7 +32,13 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="page-pool size incl. the reserved scrap page "
                          "(0: slots * pages-per-slot + 1)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="partition the paged KV pool into this many "
+                         "per-shard pools with block slot pinning and "
+                         "shard-balanced admission (paged mode)")
     args = ap.parse_args()
+    if args.shards > 1 and not args.paged:
+        ap.error("--shards requires --paged (per-shard pools shard the page pool)")
 
     if args.devices:
         os.environ["XLA_FLAGS"] = (
@@ -83,7 +89,13 @@ def main():
         worst = max_len
         pages_per_req = -(-worst // args.page_size)
         if args.pool_pages:
-            cap = (args.pool_pages - 1) // pages_per_req
+            if args.shards > 1:
+                # per-shard pools each reserve their own scrap page, and a
+                # request draws only from its slot's shard
+                per = -(-args.pool_pages // args.shards)
+                cap = args.shards * ((per - 1) // pages_per_req)
+            else:
+                cap = (args.pool_pages - 1) // pages_per_req
             if cap < 1:
                 ap.error(
                     f"--pool-pages {args.pool_pages} cannot hold even one "
@@ -98,7 +110,8 @@ def main():
                     "or raise --pool-pages"
                 )
         paged_kw = dict(paged=True, page_size=args.page_size,
-                        pool_pages=args.pool_pages or None)
+                        pool_pages=args.pool_pages or None,
+                        shards=args.shards)
 
     def serve():
         eng = Engine(params, cfg, max_len=max_len, slots=args.slots,
@@ -126,6 +139,10 @@ def main():
         print(f"page pool: peak {st.pool_peak_pages}/{eng.pool.capacity} pages "
               f"of {eng.page_size} ({st.peak_active} slots at peak); "
               f"page waste {100*st.page_frac:.1f}%")
+        if eng.shards > 1:
+            peaks = st.shard_peak_cost or [0.0] * eng.shards
+            print(f"shards: {eng.shards} per-shard pools, peak cost "
+                  + " ".join(f"s{i}={c:.0f}" for i, c in enumerate(peaks)))
         print(f"prefix reuse: {st.prefix_hits} warm admissions, "
               f"{st.prefix_hit_tokens} prompt tokens skipped")
     print(f"sample: {outs[0][len(reqs[0].tokens):].tolist()}")

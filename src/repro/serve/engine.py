@@ -46,6 +46,18 @@ into pages it owns).  When the pool runs dry, admission *queues* —
 ``Scheduler.restore`` puts the batch back — rather than corrupting live
 pages.
 
+**Mesh-sharded serving** (``shards=`` / ``mesh=``): the slot grid and the
+paged page pool split into per-shard partitions — slot ``s`` of ``nslots``
+lives on shard ``s·shards // nslots``, draws pages only from that shard's
+disjoint pool id range (its own scrap page included), and hits only that
+shard's prefix index, so every page a slot touches is local to its shard.
+Admission stays equalized *and* balanced across shards: the scheduler's
+shard-aware ``take`` hands the heaviest picks to the lightest-loaded
+shards.  Capacity scales with the mesh (``paged_capacity_slots`` sums the
+per-shard pools) while per-row independence keeps each request's tokens
+bitwise-identical to a single-shard serve.  With ``mesh=`` the persistent
+pool K/V parks laid out over the mesh axis between ``serve()`` calls.
+
 **EOS early exit**: requests carrying ``eos_token`` keep a device-side
 done flag + truncation index next to the ``(slots, max_new)`` output
 buffer; flags are polled every ``eos_poll`` decode steps (one tiny
@@ -63,7 +75,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from .paged import PagePool, PrefixCache, prefix_chain
+from .paged import PagePool, PrefixCache, ShardedPagePool, prefix_chain
 from .scheduler import Scheduler, bucket_length
 
 __all__ = ["GenRequest", "EngineStats", "Engine"]
@@ -101,6 +113,9 @@ class EngineStats:
     page_frac: float = 0.0      # partial-last-page fragmentation (sched)
     peak_active: int = 0        # max concurrently-occupied slots
     pool_peak_pages: int = 0    # engine-lifetime peak pool occupancy
+    # mesh-sharded serving: peak concurrent live cost per shard (the
+    # balance the shard-aware scheduler maintains); [] for single-shard
+    shard_peak_cost: list = dataclasses.field(default_factory=list)
     # EOS early exit
     early_exits: int = 0        # slots retired before their token budget
 
@@ -115,7 +130,7 @@ class Engine:
         bucket: int = 1, jit_kwargs: dict | None = None,
         paged: bool = False, page_size: int | None = None,
         pool_pages: int | None = None, prefix_reuse: bool = True,
-        eos_poll: int = 4,
+        eos_poll: int = 4, shards: int = 1, mesh=None, mesh_axis: str = "model",
     ):
         self.params = params
         self.cfg = cfg
@@ -123,6 +138,27 @@ class Engine:
         self.bucket = bucket
         self.paged = paged
         self.eos_poll = max(int(eos_poll), 1)
+        # mesh-sharded serving: the slot grid and (paged) KV pool split into
+        # `shards` disjoint partitions — slot s of nslots lives on shard
+        # s·shards // nslots, every page it touches comes from that shard's
+        # pool range, and admission balances live cost per shard (the
+        # scheduler's shard-aware take).  Per-row model computation is
+        # independent of batch composition, so each request's tokens stay
+        # bitwise-identical to a single-shard serve.  Passing ``mesh=`` sets
+        # shards from the mesh axis and parks the persistent page pool
+        # arrays over it between serve() calls.
+        if mesh is not None:
+            shards = mesh.shape[mesh_axis]
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        if shards > slots:
+            raise ValueError(
+                f"shards ({shards}) cannot exceed slots ({slots}): a shard "
+                "with no slot would idle its whole pool partition"
+            )
+        self.shards = int(shards)
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         self.stats = EngineStats()
         kw = jit_kwargs or {}
 
@@ -149,15 +185,27 @@ class Engine:
             self.page_size = page_size
             self.max_len = -(-max_len // page_size) * page_size
             self.pages_per_slot = self.max_len // page_size
-            self.pool = PagePool(
-                pool_pages or slots * self.pages_per_slot + 1, page_size
-            )
+            if self.shards == 1:
+                self.pool = PagePool(
+                    pool_pages or slots * self.pages_per_slot + 1, page_size
+                )
+                pools = [self.pool]
+            else:
+                # per-shard pools over disjoint global id ranges; pool_pages
+                # (when given) is the TOTAL budget, split evenly
+                per = (
+                    -(-pool_pages // self.shards) if pool_pages
+                    else -(-slots // self.shards) * self.pages_per_slot + 1
+                )
+                self.pool = ShardedPagePool(self.shards, per, page_size)
+                pools = self.pool.pools
             # prefix K/V is only bitwise-reproducible for plain sequence
-            # positions with no prompt offset — dense family exactly
-            self.prefix_cache = (
-                PrefixCache(self.pool)
-                if prefix_reuse and cfg.family == "dense" else None
-            )
+            # positions with no prompt offset — dense family exactly.
+            # Sharded: one index per shard (hit pages must be local to the
+            # admitted slot's shard — pages are never borrowed across).
+            reuse = prefix_reuse and cfg.family == "dense"
+            self.prefix_caches = [PrefixCache(p) if reuse else None for p in pools]
+            self.prefix_cache = self.prefix_caches[0]  # single-shard alias
             self._pages = None  # persistent {"k_pages","v_pages"} device arrays
 
             def _prefill(params, batch, last, prior):
@@ -171,6 +219,7 @@ class Engine:
             self.max_len = max_len
             self.pool = None
             self.prefix_cache = None
+            self.prefix_caches = [None] * self.shards
 
             def _prefill(params, batch, last):
                 return lm.prefill(params, batch, cfg, cache_len=self.max_len, last=last)
@@ -203,9 +252,34 @@ class Engine:
 
     def paged_capacity_slots(self, pages_per_request: int | None = None) -> int:
         """How many concurrent slots the pool can back if every request
-        needs ``pages_per_request`` pages (worst case: a full slot)."""
-        per = pages_per_request or self.pages_per_slot
-        return max(self.pool.capacity // max(per, 1), 0)
+        needs ``pages_per_request`` pages (worst case: a full slot).
+        Sharded pools sum per-shard capacity, so capacity scales with the
+        mesh: each added shard brings its own page partition."""
+        per = max(pages_per_request or self.pages_per_slot, 1)
+        if self.shards > 1:
+            # pages never cross shards: count whole requests per shard
+            return sum(p.capacity // per for p in self.pool.pools)
+        return max(self.pool.capacity // per, 0)
+
+    # ------------------------------------------------------------------
+    # shard layout helpers
+    # ------------------------------------------------------------------
+    def _slot_shard(self, slot: int, nslots: int) -> int:
+        """Contiguous slot→shard partition: slot s of nslots lives on shard
+        ``s·shards // nslots`` (block layout — what a PartitionSpec over the
+        slot axis would place per device)."""
+        return min(slot * self.shards // max(nslots, 1), self.shards - 1)
+
+    def _scrap_id(self, slot: int, nslots: int) -> int:
+        """The scrap page id for ``slot``'s shard (0 when single-shard)."""
+        if self.shards == 1:
+            return 0
+        return self.pool.scrap(self._slot_shard(slot, nslots))
+
+    def _alloc_pages(self, n: int, shard: int) -> list[int] | None:
+        if self.shards == 1:
+            return self.pool.alloc(n)
+        return self.pool.alloc(n, shard)
 
     # ------------------------------------------------------------------
     # paged-cache helpers
@@ -225,7 +299,15 @@ class Engine:
             self.cfg, nslots, self.pool.num_pages, self.page_size, enc_len=enc_len
         )
         if self._pages is not None:
-            caches["attn"] = dict(self._pages)
+            pages = dict(self._pages)
+            if self.mesh is not None:
+                # The pool parks laid out over the mesh between serve()
+                # calls; canonicalize placement for the jitted dispatches
+                # (the same stance as repro.kernels.spike) so the
+                # bitwise-per-request contract holds against a
+                # single-device serve.
+                pages = jax.device_put(pages, jax.devices()[0])
+            caches["attn"] = pages
         return caches
 
     def _gather_prior(self, caches, pages: list[int]):
@@ -325,19 +407,23 @@ class Engine:
             assert lb + offset + r.max_new_tokens <= self.max_len, "max_len too small"
             if self.paged:
                 need = self._request_pages(len(r.tokens), lb, r.max_new_tokens)
-                if need > self.pool.capacity:
+                cap = getattr(self.pool, "shard_capacity", self.pool.capacity)
+                if need > cap:
                     raise ValueError(
-                        f"request needs {need} pages of {self.page_size} but the "
-                        f"pool only holds {self.pool.capacity}; raise pool_pages "
-                        f"to at least {need + 1} (one page is reserved scrap)"
+                        f"request needs {need} pages of {self.page_size} but "
+                        f"{'each shard' if self.shards > 1 else 'the pool'} "
+                        f"only holds {cap}; raise pool_pages to at least "
+                        f"{(need + 1) * self.shards} (one page per "
+                        f"{'shard' if self.shards > 1 else 'pool'} is reserved scrap)"
                     )
 
         sched = Scheduler()
+        prefix_reuse = self.paged and any(c is not None for c in self.prefix_caches)
         for i, r in enumerate(reqs):
             s0 = len(r.tokens)
             lb = self._bucket_len(s0, fixed_bucket)
             chain = None
-            if self.paged and self.prefix_cache is not None:
+            if prefix_reuse:
                 # salt = the bucket length: prefix K/V is bitwise-exact only
                 # between prompts prefilled at the same padded length, so
                 # hits must never cross buckets (see paged.prefix_chain)
@@ -351,7 +437,15 @@ class Engine:
         enc_len = max((fixed_bucket or 0) // 4, 1) if self.cfg.family == "encdec" else 0
         if self.paged:
             caches = self._paged_caches(nslots, enc_len)
-            page_table = jnp.zeros((nslots, self.pages_per_slot), jnp.int32)
+            # idle rows sink writes into their own shard's scrap page
+            # (all-zeros — the historical layout — when single-shard)
+            page_table = jnp.asarray(
+                np.array(
+                    [[self._scrap_id(s, nslots)] * self.pages_per_slot
+                     for s in range(nslots)],
+                    np.int32,
+                )
+            )
         else:
             caches = lm.init_caches(self.cfg, nslots, self.max_len, enc_len=enc_len)
             page_table = None
@@ -371,11 +465,14 @@ class Engine:
         eos_countdown = self.eos_poll
         active: list[dict | None] = [None] * nslots
         results: list[np.ndarray | None] = [None] * len(reqs)
+        # live admitted cost per shard — the scheduler's occupancy signal
+        shard_cost = [0.0] * self.shards
 
         def finish(slot):
             nonlocal page_table
             st = active[slot]
             r = reqs[st["rid"]]
+            shard_cost[st["shard"]] -= st["cost"]
             if r.eos_token is not None:
                 # output row ++ truncation index, fetched together — still
                 # ONE transfer per request
@@ -391,8 +488,11 @@ class Engine:
             stats.generated_tokens += n
             if self.paged:
                 self.pool.release(st["pages"])
-                page_table = page_table.at[slot].set(
-                    jnp.zeros((self.pages_per_slot,), jnp.int32)  # → scrap
+                page_table = page_table.at[slot].set(  # → shard-local scrap
+                    jnp.full(
+                        (self.pages_per_slot,), self._scrap_id(slot, nslots),
+                        jnp.int32,
+                    )
                 )
                 sched.stats.live_tokens += st["valid"] + n
                 sched.stats.page_tokens += len(st["pages"]) * self.page_size
@@ -401,10 +501,19 @@ class Engine:
         while len(sched) or any(active):
             free = [s for s in range(nslots) if active[s] is None]
             if free and len(sched):
-                taken = sched.take(len(free), equalize=equalize)
+                taken = sched.take(
+                    len(free), equalize=equalize,
+                    shards=(
+                        [self._slot_shard(s, nslots) for s in free]
+                        if self.shards > 1 else None
+                    ),
+                    shard_load=shard_cost if self.shards > 1 else None,
+                )
                 while taken:
                     sr = taken.pop(0)
                     slot = free.pop(0)
+                    shard = self._slot_shard(slot, nslots)
+                    pcache = self.prefix_caches[shard] if self.paged else None
                     rid, r = sr.payload
                     s0 = len(r.tokens)
                     lb = self._bucket_len(s0, fixed_bucket)
@@ -412,21 +521,23 @@ class Engine:
                     new_pages: list[int] = []
                     prior = None
                     if self.paged:
-                        if self.prefix_cache is not None and sr.prefix:
+                        if pcache is not None and sr.prefix:
                             # strictly-before-the-last-token limit keeps at
                             # least one suffix token to prefill (the logits
                             # source) — and, with the s0 // page insert limit
                             # below, guarantees shared pages are never
-                            # decode-written (structural copy-on-write)
-                            hit_pages = self.prefix_cache.lookup(
+                            # decode-written (structural copy-on-write).
+                            # Sharded: only this shard's index is consulted,
+                            # so hit pages are always slot-local.
+                            hit_pages = pcache.lookup(
                                 sr.prefix[: (s0 - 1) // self.page_size]
                             )
                         need = self._request_pages(s0, lb, r.max_new_tokens)
                         need_new = need - len(hit_pages)
-                        new_pages = self.pool.alloc(need_new)
-                        if new_pages is None and self.prefix_cache is not None:
-                            self.prefix_cache.evict(need_new)
-                            new_pages = self.pool.alloc(need_new)
+                        new_pages = self._alloc_pages(need_new, shard)
+                        if new_pages is None and pcache is not None:
+                            pcache.evict(need_new)
+                            new_pages = self._alloc_pages(need_new, shard)
                         if new_pages is None:
                             # pool exhausted: queue the rest of the batch
                             # rather than corrupting live pages
@@ -475,11 +586,11 @@ class Engine:
                         row_np = np.zeros((self.pages_per_slot,), np.int32)
                         row_np[: len(row)] = row
                         page_table = page_table.at[slot].set(jnp.asarray(row_np))
-                        if self.prefix_cache is not None and sr.prefix:
+                        if pcache is not None and sr.prefix:
                             # full prompt pages only: decode writes start at
                             # position s0, i.e. page >= s0 // page_size
                             ins = s0 // self.page_size
-                            self.prefix_cache.insert(sr.prefix[:ins], row[:ins])
+                            pcache.insert(sr.prefix[:ins], row[:ins])
                     else:
                         caches = _insert_slot(caches, new_caches, slot, valid)
                     # split before first use (same key discipline the
@@ -503,7 +614,17 @@ class Engine:
                         d0 = (t0[0, 0] == e) if e >= 0 else jnp.asarray(False)
                         done = done.at[slot].set(d0)
                         done_idx = done_idx.at[slot].set(jnp.where(d0, 1, out_cap))
-                    active[slot] = {"rid": rid, "left": r.max_new_tokens - 1}
+                    active[slot] = {
+                        "rid": rid, "left": r.max_new_tokens - 1,
+                        "shard": shard, "cost": sr.cost,
+                    }
+                    shard_cost[shard] += sr.cost
+                    stats.shard_peak_cost = [
+                        max(a, b) for a, b in zip(
+                            stats.shard_peak_cost or [0.0] * self.shards,
+                            shard_cost,
+                        )
+                    ]
                     if self.paged:
                         active[slot]["pages"] = row
                         active[slot]["valid"] = valid
@@ -561,6 +682,22 @@ class Engine:
                 "k_pages": caches["attn"]["k_pages"],
                 "v_pages": caches["attn"]["v_pages"],
             }
+            if self.mesh is not None:
+                # park the persistent pool over the mesh: shard k's page
+                # range [k·P, (k+1)·P) lands on device k of the axis —
+                # exactly the blocks its slots allocate from, so the
+                # resident KV footprint per device is 1/shards of the pool.
+                # _paged_caches canonicalizes back before the next jitted
+                # dispatch (bitwise-per-request contract).
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                self._pages = jax.device_put(
+                    self._pages,
+                    NamedSharding(
+                        self.mesh,
+                        PartitionSpec(None, self.mesh_axis, None, None, None),
+                    ),
+                )
         return results  # type: ignore[return-value]
 
     # ------------------------------------------------------------------

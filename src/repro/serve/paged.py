@@ -13,6 +13,8 @@ Three pieces, all host-side (device arrays never live here):
   per-page refcounts.  Page 0 is reserved as the **scrap page**: idle
   page-table rows point at it so stale decode writes from retired slots
   land harmlessly; it is never allocated and never read by a live row.
+  A mesh-sharded engine uses one pool per shard over disjoint global id
+  ranges (:class:`ShardedPagePool`), each with its own shard-local scrap.
 * :func:`prefix_chain` — sha1 chain over page-size token blocks (the same
   bytes+shape+dtype fingerprint shape as the ``SolveService`` matrix
   fingerprint), one digest per *full* page of prompt.  Digest ``j`` commits
@@ -35,7 +37,7 @@ from collections import deque
 
 import numpy as np
 
-__all__ = ["PagePool", "PrefixCache", "prefix_chain"]
+__all__ = ["PagePool", "ShardedPagePool", "PrefixCache", "prefix_chain"]
 
 #: Reserved scrap page id — sink for writes from idle page-table rows.
 SCRAP_PAGE = 0
@@ -48,17 +50,28 @@ class PagePool:
     so ``capacity == num_pages - 1`` pages are allocatable.  ``alloc`` is
     all-or-nothing: a request that cannot get every page it needs gets
     none, so a partially-admitted slot can never corrupt live pages.
+
+    ``base`` offsets every page id by a constant: a mesh-sharded engine
+    gives each shard its own pool over the global id range
+    ``[base, base + num_pages)`` (shard k of a pool axis laid out over the
+    mesh owns exactly that contiguous page block), with id ``base`` as the
+    shard-local scrap page so idle rows of that shard's slots sink writes
+    without crossing shards.  ``base == 0`` (the default) is the historical
+    single-pool layout, scrap page 0 included.
     """
 
-    def __init__(self, num_pages: int, page_size: int):
+    def __init__(self, num_pages: int, page_size: int, *, base: int = 0):
         if num_pages < 2:
             raise ValueError(f"pool needs >= 2 pages (1 is reserved scrap), got {num_pages}")
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
+        if base < 0:
+            raise ValueError(f"base must be >= 0, got {base}")
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
-        self._free: deque[int] = deque(range(1, num_pages))
-        self._ref = [0] * num_pages
+        self.base = int(base)
+        self._free: deque[int] = deque(range(base + 1, base + num_pages))
+        self._ref = [0] * num_pages  # indexed by (page - base)
         self.peak_used = 0
         self.failed_allocs = 0
 
@@ -83,30 +96,121 @@ class PagePool:
             return None
         pages = [self._free.popleft() for _ in range(n)]
         for p in pages:
-            self._ref[p] = 1
+            self._ref[p - self.base] = 1
         self.peak_used = max(self.peak_used, self.used)
         return pages
 
     def retain(self, pages: list[int]) -> None:
         for p in pages:
-            if p == SCRAP_PAGE or self._ref[p] <= 0:
+            if p == self.base or self._ref[p - self.base] <= 0:
                 raise ValueError(f"retain of unallocated page {p}")
-            self._ref[p] += 1
+            self._ref[p - self.base] += 1
 
     def release(self, pages: list[int]) -> None:
         for p in pages:
-            if p == SCRAP_PAGE or self._ref[p] <= 0:
+            if p == self.base or self._ref[p - self.base] <= 0:
                 raise ValueError(f"release of unallocated page {p}")
-            self._ref[p] -= 1
-            if self._ref[p] == 0:
+            self._ref[p - self.base] -= 1
+            if self._ref[p - self.base] == 0:
                 self._free.append(p)
 
     def refcount(self, page: int) -> int:
-        return self._ref[page]
+        return self._ref[page - self.base]
 
     def writable(self, page: int) -> bool:
         """A page is safe to write only while exactly one holder owns it."""
-        return self._ref[page] == 1
+        return self._ref[page - self.base] == 1
+
+
+class ShardedPagePool:
+    """Per-shard :class:`PagePool` s over disjoint global page-id ranges.
+
+    The mesh-sharded engine lays the KV page pool over a mesh axis: shard
+    ``k`` of ``shards`` owns the contiguous global ids
+    ``[k·P, (k+1)·P)`` (``P = pages_per_shard``), i.e. exactly the page
+    block a ``PartitionSpec`` over the pool's page axis would place on
+    device ``k`` — so every page a slot touches (scrap included) is local
+    to the slot's shard, and allocation pressure is tracked per shard
+    (occupancy feeds the scheduler's shard-balanced admission).
+
+    The facade mirrors the single-pool API where the engine consumes it;
+    ``alloc`` additionally takes the target shard (all-or-nothing within
+    that shard — pages are never borrowed across shards, locality is the
+    point), and ``release``/``retain`` route by id range.
+    """
+
+    def __init__(self, shards: int, pages_per_shard: int, page_size: int):
+        if shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self.shards = int(shards)
+        self.pages_per_shard = int(pages_per_shard)
+        self.page_size = int(page_size)
+        self.pools = [
+            PagePool(pages_per_shard, page_size, base=k * pages_per_shard)
+            for k in range(shards)
+        ]
+        self.num_pages = shards * self.pages_per_shard
+
+    def shard_of(self, page: int) -> int:
+        return page // self.pages_per_shard
+
+    def scrap(self, shard: int) -> int:
+        """The shard-local scrap page id (idle page-table rows of that
+        shard's slots point here)."""
+        return self.pools[shard].base
+
+    @property
+    def capacity(self) -> int:
+        return sum(p.capacity for p in self.pools)
+
+    @property
+    def shard_capacity(self) -> int:
+        """Allocatable pages per shard — the binding per-request bound (a
+        request's pages never span shards)."""
+        return self.pages_per_shard - 1
+
+    @property
+    def free(self) -> int:
+        return sum(p.free for p in self.pools)
+
+    @property
+    def used(self) -> int:
+        return sum(p.used for p in self.pools)
+
+    @property
+    def peak_used(self) -> int:
+        return sum(p.peak_used for p in self.pools)
+
+    @property
+    def failed_allocs(self) -> int:
+        return sum(p.failed_allocs for p in self.pools)
+
+    def shard_used(self) -> list[int]:
+        """Live page count per shard (the scheduler's occupancy signal)."""
+        return [p.used for p in self.pools]
+
+    def alloc(self, n: int, shard: int = 0) -> list[int] | None:
+        return self.pools[shard].alloc(n)
+
+    def _by_shard(self, pages: list[int]) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {}
+        for p in pages:
+            out.setdefault(self.shard_of(p), []).append(p)
+        return out
+
+    def retain(self, pages: list[int]) -> None:
+        for k, ps in self._by_shard(pages).items():
+            self.pools[k].retain(ps)
+
+    def release(self, pages: list[int]) -> None:
+        for k, ps in self._by_shard(pages).items():
+            self.pools[k].release(ps)
+
+    def refcount(self, page: int) -> int:
+        return self.pools[self.shard_of(page)].refcount(page)
+
+    def writable(self, page: int) -> bool:
+        return self.pools[self.shard_of(page)].writable(page)
 
 
 def prefix_chain(tokens, page_size: int, *, salt: str = "") -> list[str]:

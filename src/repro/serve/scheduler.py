@@ -90,6 +90,9 @@ class SchedulerStats:
     real_tokens: int = 0
     padding_tokens: int = 0
     equalized_picks: int = 0
+    # admissions whose return order was permuted toward even per-shard load
+    # (mesh-sharded engine only; 0 for single-shard serving)
+    shard_balanced: int = 0
     # paged-engine fragmentation accounting (filled at slot retirement):
     # live_tokens = tokens a request actually occupied, page_tokens = the
     # page-rounded allocation that backed them
@@ -145,13 +148,30 @@ class Scheduler:
             out[r.bucket] = out.get(r.bucket, 0) + 1
         return out
 
-    def take(self, k: int, *, equalize: bool = True) -> list[ScheduledRequest]:
+    def take(
+        self,
+        k: int,
+        *,
+        equalize: bool = True,
+        shards: list[int] | None = None,
+        shard_load: list[float] | None = None,
+    ) -> list[ScheduledRequest]:
         """Admit up to ``k`` requests.
 
         Deadline-bearing requests go first, in strict EDF order.  Remaining
         slots fill from the FIFO front window of deadline-free requests with
         the equalized fold pick (see module docstring); ``equalize=False``
-        degrades to plain FIFO."""
+        degrades to plain FIFO.
+
+        **Shard-occupancy-aware ordering** (mesh-sharded engine):
+        ``shards[i]`` names the shard of the i-th slot the caller will fill
+        with the i-th returned request, and ``shard_load`` carries the live
+        cost per shard.  The *choice* of requests is unchanged — only their
+        return order is permuted, heaviest-cost request to
+        lightest-loaded target shard (the eq.-7 pairing applied across the
+        mesh), so equalized slot filling balances live tokens per shard
+        instead of stacking the heavy picks on whichever shard's slots
+        freed first."""
         if k <= 0 or not self._queue:
             return []
         with_dl = sorted(
@@ -175,7 +195,38 @@ class Scheduler:
             self.stats.admitted += 1
             self.stats.real_tokens += r.real
             self.stats.padding_tokens += r.padded
+        if shards is not None and len(set(shards[: len(picked)])) > 1:
+            picked = self._balance_shards(
+                picked, shards[: len(picked)], shard_load
+            )
         return picked
+
+    def _balance_shards(
+        self,
+        picked: list[ScheduledRequest],
+        shards: list[int],
+        shard_load: list[float] | None,
+    ) -> list[ScheduledRequest]:
+        """Permute ``picked`` so position i (→ a slot on ``shards[i]``)
+        receives the request that keeps per-shard live cost most even:
+        greedily hand the heaviest remaining request to the target slot
+        whose shard currently carries the least cost (deadline holders keep
+        EDF order among themselves — only their slot assignment moves)."""
+        nsh = max(shards) + 1
+        load = list(shard_load) + [0.0] * (nsh - len(shard_load or [])) \
+            if shard_load else [0.0] * nsh
+        by_cost = sorted(
+            range(len(picked)), key=lambda i: (-picked[i].cost, picked[i].seq)
+        )
+        slots_left = list(range(len(picked)))
+        out: list[ScheduledRequest | None] = [None] * len(picked)
+        for i in by_cost:
+            pos = min(slots_left, key=lambda s: (load[shards[s]], s))
+            slots_left.remove(pos)
+            out[pos] = picked[i]
+            load[shards[pos]] += picked[i].cost
+        self.stats.shard_balanced += len(picked)
+        return [r for r in out if r is not None]
 
     def drain(self) -> list[ScheduledRequest]:
         """All pending requests in priority order (used by batch front ends

@@ -37,6 +37,15 @@ dispatch widths for a transferable shape (``AutotuneCache.best_width``),
 the stack is chunked at the measured most-µs-per-column-efficient width
 instead — unmeasured shapes keep full coalescing.
 
+**Mesh routing.**  A service built with ``mesh=`` routes banded groups
+whose band fits the mesh partition (:func:`repro.core.spike.spike_supported`)
+through the multi-device registry path: factorization dispatches as a
+``devices > 1`` problem — SPIKE split factors vs replication, weighed per
+``(n, bw, devices)`` by the measured autotune cache — and a SPIKE-factored
+group's coalesced stacked-RHS substitution runs shard-local over the mesh
+with one reduced spike solve for the whole stack.  Bands too wide for the
+partition (and dense traffic) stay on the single-device path unchanged.
+
 Admission/ordering rides the shared :class:`repro.serve.scheduler.Scheduler`
 (buckets = ``(structure, n, bw, dtype, tolerance)``; deadline/FIFO order
 decides which matrix group flushes first).
@@ -72,6 +81,7 @@ from repro.core.factorization import Factorization
 from repro.core.pivoted import PivotedFactors
 from repro.core.randomized import RankKFactors
 from repro.core.solve import split_rhs, stack_rhs
+from repro.core.spike import SpikeFactors, spike_supported
 from repro.kernels import ops as kops
 from repro.solvers.backends import RAND_LU_RESIDUAL_BOUND
 from .scheduler import Scheduler
@@ -170,6 +180,8 @@ class SolveService:
         quarantine_ttl: int = 8,
         clock=None,
         verify_residual: bool = False,
+        mesh=None,
+        mesh_axis: str = "model",
     ):
         """``health=`` screens every factorization (``True`` = default
         thresholds, a :class:`repro.core.health.HealthThresholds` to tune,
@@ -179,11 +191,18 @@ class SolveService:
         (e.g. ``time.monotonic``) arms deadline shedding; without one,
         deadlines only order the flush (the historical behaviour).
         ``verify_residual=True`` additionally gates every coalesced solve
-        on its measured relative residual."""
+        on its measured relative residual.  ``mesh=`` (a ``jax.sharding``
+        mesh spanning > 1 device along ``mesh_axis``) routes banded groups
+        whose band fits the mesh partition (``spike_supported``) through
+        the multi-device registry path — SPIKE split factors vs replication
+        decided per ``(n, bw, devices)`` by the measured autotune cache,
+        and the coalesced stacked-RHS substitution runs sharded."""
         self.cache_entries = cache_entries
         self.health = health
         self.quarantine_ttl = quarantine_ttl
         self.verify_residual = verify_residual
+        self.mesh = mesh
+        self.mesh_axis = mesh_axis
         self._clock = clock
         # fp -> {accuracy tier -> factors}; tier 0.0 = exact packed factors,
         # tier t > 0 = approximate factors guaranteeing relative residual t.
@@ -263,6 +282,16 @@ class SolveService:
             return factors.tier
         return RAND_LU_RESIDUAL_BOUND if isinstance(factors, RankKFactors) else 0.0
 
+    def _band_spans_mesh(self, req: SolveRequest) -> bool:
+        """True when this banded operand should take the multi-device
+        path: a mesh is configured, it spans > 1 device, and the band is
+        narrow enough for the SPIKE partition (``2·bw ≤ ceil(n/d)``)."""
+        if self.mesh is None or not req.bw:
+            return False
+        devices = int(self.mesh.shape[self.mesh_axis])
+        n = int(req.a.shape[-2])
+        return devices > 1 and spike_supported(n, req.bw, devices)
+
     def _factors_for(self, req: SolveRequest, tolerance: float):
         tiers = self._lru.get(req.fp)
         if tiers is not None:
@@ -282,10 +311,14 @@ class SolveService:
             # enrich at factor time: the banded serve steady state is
             # many solves per factor, so the pre-inverted blocks pay for
             # themselves and every cache hit solves via the two-phase
-            # inverted path with zero layout work.
+            # inverted path with zero layout work.  When the band spans a
+            # mesh, route through the multi-device registry path (SPIKE
+            # split factors vs replication, measured per (n, bw, devices));
+            # bands too wide for the partition stay on the local path.
+            mesh = self.mesh if self._band_spans_mesh(req) else None
             factors = kops.banded_lu(
                 req.a, bw=req.bw, tolerance=tolerance, health=self.health,
-                enrich=True,
+                enrich=True, mesh=mesh, mesh_axis=self.mesh_axis,
             )
         elif req.rank is not None:
             factors = kops.lu(
@@ -425,17 +458,25 @@ class SolveService:
         """One coalesced substitution — chunked at the autotuned coalescing
         width when the registry has measured one for this shape."""
         def run(cols):
+            if isinstance(factors, SpikeFactors):
+                # split factors substitute shard-locally over the mesh; the
+                # coalesced stack is one wide multi-RHS spike solve.
+                return kops.banded_solve(
+                    factors, cols, bw=req.bw, tolerance=tolerance,
+                    mesh=self.mesh, mesh_axis=self.mesh_axis,
+                )
             if req.bw:
                 return kops.banded_solve(factors, cols, bw=req.bw, tolerance=tolerance)
             return kops.lu_solve(factors, cols, tolerance=tolerance)
 
         width = int(stacked.shape[-1])
         cap = None
-        if not isinstance(factors, (RankKFactors, PivotedFactors)):
+        if not isinstance(factors, (RankKFactors, PivotedFactors, SpikeFactors)):
             # width measurements only exist for packed-factor substitution;
-            # rank-k solves are GEMM-shaped and always coalesce fully, and
+            # rank-k solves are GEMM-shaped and always coalesce fully,
             # pivoted factors (the escalation last resort) are too rare to
-            # have measured widths.
+            # have measured widths, and SPIKE split factors coalesce fully
+            # so the reduced spike system is solved exactly once.
             problem = solvers.Problem.from_arrays(
                 "solve", factors, stacked, bw=req.bw, tolerance=tolerance
             )

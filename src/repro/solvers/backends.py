@@ -15,6 +15,7 @@ Adding a backend is one :func:`repro.solvers.registry.register` call — see
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -693,4 +694,129 @@ register(Backend(
     priority=lambda p: 0.5,  # below bf16_ir: admitted ≠ preferred
     autotune=False,
     residual_bound=lambda p: RAND_LU_RESIDUAL_BOUND,
+))
+
+
+# ---------------------------------------------------------------------------
+# multi-device banded: SPIKE split solve vs replicated fallback.
+#
+# ``spike`` partitions the band into per-device diagonal blocks (see
+# repro.core.spike / repro.kernels.spike), admitted only where the spike
+# couplings cannot overlap (2·bw ≤ ceil(n/devices)).  ``replicated`` is the
+# always-capable fallback: it re-dispatches the same operand as a devices=1
+# problem through the ordinary local selection — correctness on one device,
+# no scaling.  Both are ``autotune=True`` so the measured cache (keyed on
+# ``devices``) weighs SPIKE against replication per (n, bw, devices); with
+# no measurement the static priorities prefer SPIKE wherever it is admitted.
+# A health-screened/residual-screened SPIKE dispatch demotes to replicated
+# through the ordinary escalation funnel.
+# ---------------------------------------------------------------------------
+def _spike_ok(p: Problem) -> bool:
+    from repro.core.spike import spike_supported
+
+    return p.devices > 1 and spike_supported(p.n, p.bw, p.devices)
+
+
+def _spike_lu(problem, arow, *, bw, mesh=None, axis="model", block=None,
+              interpret=None, **_):
+    if mesh is not None:
+        from repro.kernels.spike import spike_lu_sharded
+
+        return spike_lu_sharded(
+            arow, bw=bw, mesh=mesh, axis=axis, block=block, interpret=interpret
+        )
+    from repro.core.spike import spike_lu
+
+    return spike_lu(arow, bw=bw, devices=problem.devices, block=block)
+
+
+def _spike_solve(problem, factors, b, *, bw=0, mesh=None, axis="model",
+                 block=None, interpret=None, **_):
+    if mesh is not None:
+        from repro.kernels.spike import spike_solve_sharded
+
+        return spike_solve_sharded(
+            factors, b, mesh=mesh, axis=axis, block=block, interpret=interpret
+        )
+    from repro.core.spike import spike_solve
+
+    return spike_solve(factors, b, block=block)
+
+
+def _spike_linear_solve(problem, arow, b, *, bw, mesh=None, axis="model",
+                        block=None, interpret=None, **_):
+    if mesh is not None:
+        from repro.kernels.spike import spike_linear_solve_sharded
+
+        return spike_linear_solve_sharded(
+            arow, b, bw=bw, mesh=mesh, axis=axis, block=block, interpret=interpret
+        )
+    from repro.core.spike import spike_linear_solve
+
+    return spike_linear_solve(
+        arow, b, bw=bw, devices=problem.devices, block=block
+    )
+
+
+def _replicated_banded_lu(problem, arow, *, bw, mesh=None, axis=None,
+                          block=None, interpret=None, **_):
+    from .registry import dispatch
+
+    return dispatch(
+        dataclasses.replace(problem, devices=1),
+        arow, bw=bw, block=block, interpret=interpret,
+    )
+
+
+def _replicated_banded_linear_solve(problem, arow, b, *, bw, mesh=None,
+                                    axis=None, block=None, interpret=None, **_):
+    # single-device banded linear_solve has no fused backend (it composes in
+    # repro.kernels.ops), so replication composes the local factor and solve
+    # selections directly
+    from .registry import dispatch
+
+    local = dataclasses.replace(problem, devices=1)
+    factors = dispatch(
+        dataclasses.replace(local, op="factor"),
+        arow, bw=bw, block=block, interpret=interpret,
+    )
+    return dispatch(
+        dataclasses.replace(local, op="solve"),
+        factors, b, bw=bw, block=block, interpret=interpret,
+    )
+
+
+register(Backend(
+    name="spike", op="factor", structure="banded",
+    call=_spike_lu,
+    supports=_spike_ok,
+    priority=lambda p: 10.0,
+))
+register(Backend(
+    name="replicated", op="factor", structure="banded",
+    call=_replicated_banded_lu,
+    supports=lambda p: p.devices > 1,
+    priority=lambda p: 1.0,
+))
+register(Backend(
+    name="spike", op="solve", structure="banded",
+    # consumes SpikeFactors, never auto-selected: repro.kernels.ops
+    # .banded_solve forces it when handed a SPIKE artifact (the pivoted /
+    # rank-k pattern)
+    call=_spike_solve,
+    supports=lambda p: False,
+    priority=lambda p: 0.0,
+    autotune=False,
+))
+register(Backend(
+    name="spike", op="linear_solve", structure="banded",
+    call=_spike_linear_solve,
+    supports=_spike_ok,
+    priority=lambda p: 10.0,
+))
+register(Backend(
+    name="replicated", op="linear_solve", structure="banded",
+    call=_replicated_banded_linear_solve,
+    supports=lambda p: p.devices > 1,
+    priority=lambda p: 1.0,
 ))

@@ -53,20 +53,31 @@ _VERSION = 1
 # tiers are not value-identical to the exact tier, so a measurement taken at
 # a loose tolerance must never steer a tighter problem's selection (entries
 # persisted before the field existed load as tolerance-0 == exact rows).
-_KEY_FIELDS = ("op", "structure", "dtype", "bw", "n", "tolerance")
+# ``devices`` is likewise a key field: the single-device and mesh-sharded
+# candidate sets are disjoint (SPIKE vs replication), so a single-device
+# measured win must never steer a multi-device dispatch or vice versa
+# (pre-devices caches load as devices-1 == local rows).
+_KEY_FIELDS = ("op", "structure", "dtype", "bw", "n", "tolerance", "devices")
 
 
 def cache_path() -> str:
     return os.path.expanduser(os.environ.get(ENV_VAR) or DEFAULT_USER_PATH)
 
 
+_KEY_DEFAULTS = {"tolerance": 0.0, "devices": 1}
+
+
 def _entry_key(e: dict) -> tuple:
     # entries built by hand (tests, old tools) may omit tolerance == exact
-    return tuple(e.get(f, 0.0) if f == "tolerance" else e[f] for f in _KEY_FIELDS)
+    # and devices == 1 (single-device)
+    return tuple(
+        e.get(f, _KEY_DEFAULTS[f]) if f in _KEY_DEFAULTS else e[f]
+        for f in _KEY_FIELDS
+    )
 
 
 def _problem_key(p: Problem) -> tuple:
-    return (p.op, p.structure, p.dtype, p.bw, p.n, float(p.tolerance))
+    return (p.op, p.structure, p.dtype, p.bw, p.n, float(p.tolerance), int(p.devices))
 
 
 class AutotuneCache:
@@ -85,6 +96,7 @@ class AutotuneCache:
                 raw = json.load(f)
             for e in raw.get("entries", []):
                 e.setdefault("tolerance", 0.0)  # pre-tolerance caches = exact rows
+                e.setdefault("devices", 1)  # pre-devices caches = local rows
                 if all(f in e for f in _KEY_FIELDS) and isinstance(e.get("times_us"), dict):
                     entries.append(e)
         except FileNotFoundError:
@@ -182,13 +194,17 @@ class AutotuneCache:
     def _matches(self, problem: Problem) -> list[tuple[float, dict]]:
         out = []
         for e in self.entries:
-            # exact match on every non-size key — in particular tolerance:
-            # nearest-size transfer interpolates over *speed*, never over
-            # *accuracy tier* (a loose-tolerance win must not leak into a
-            # tight dispatch, nor an exact measurement into a loose one
-            # whose candidate set differs).
-            if (e["op"], e["structure"], e["dtype"], e.get("tolerance", 0.0)) != (
-                problem.op, problem.structure, problem.dtype, float(problem.tolerance)
+            # exact match on every non-size key — in particular tolerance
+            # and devices: nearest-size transfer interpolates over *speed*,
+            # never over *accuracy tier* (a loose-tolerance win must not
+            # leak into a tight dispatch) nor over *device count* (the
+            # single-device and mesh-sharded candidate sets are disjoint).
+            if (
+                e["op"], e["structure"], e["dtype"],
+                e.get("tolerance", 0.0), e.get("devices", 1),
+            ) != (
+                problem.op, problem.structure, problem.dtype,
+                float(problem.tolerance), int(problem.devices),
             ):
                 continue
             n_ratio = max(e["n"], problem.n) / max(min(e["n"], problem.n), 1)

@@ -267,7 +267,10 @@ _DEMOTIONS: dict[tuple, int] = {}  # (shape key, backend name) -> remaining TTL
 
 
 def _shape_key(p: Problem) -> tuple:
-    return (p.op, p.structure, p.dtype, p.n, p.bw, p.batch)
+    # ``devices`` is part of the shape: a SPIKE demotion on the 8-device
+    # mesh must not suppress the (disjoint) single-device candidate set,
+    # nor leak across mesh sizes.
+    return (p.op, p.structure, p.dtype, p.n, p.bw, p.batch, p.devices)
 
 
 def _demote(problem: Problem, name: str) -> None:

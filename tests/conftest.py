@@ -26,6 +26,21 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_code_mappings():
+    """Cap the live-executable footprint across the suite.
+
+    XLA's CPU client never evicts compiled executables, and each one pins
+    several JIT code mappings; at this suite's size (~400 tests x 8 forced
+    host devices) the process crosses ``vm.max_map_count`` and LLVM
+    segfaults on the next failed mmap, hundreds of tests after the modules
+    that actually grew the footprint.  Dropping jax's caches after every
+    test module keeps the mapping count bounded — they are pure perf
+    caches, so behaviour (and every bitwise contract) is unaffected."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

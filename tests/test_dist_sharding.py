@@ -151,3 +151,62 @@ def test_bubble_fraction():
     assert abs(bubble_fraction(4, 8) - 3 / 11) < 1e-12
     assert bubble_fraction(1, 8) == 0.0
     assert abs(bubble_fraction(8, 8) - 7 / 15) < 1e-12
+
+
+def test_bubble_fraction_edges():
+    # fewer microbatches than stages: the bubble dominates
+    assert abs(bubble_fraction(4, 2) - 3 / 5) < 1e-12
+    assert abs(bubble_fraction(4, 1) - 3 / 4) < 1e-12
+    # single stage never bubbles, whatever M is
+    assert bubble_fraction(1, 1) == 0.0
+    assert bubble_fraction(1, 3) == 0.0
+
+
+def _gpipe_system(num_stages, num_mb, layers_per=2, d=8):
+    ws = jax.random.normal(
+        jax.random.PRNGKey(0), (num_stages, layers_per, d, d)
+    ) * (d ** -0.5)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (num_mb, 4, d))
+
+    def stage_fn(w, x):
+        for l in range(layers_per):
+            x = jnp.tanh(x @ w[l])
+        return x
+
+    return ws, xs, stage_fn
+
+
+def _gpipe_reference(ws, xs, stage_fn):
+    want = xs
+    for s in range(ws.shape[0]):
+        want = jax.vmap(lambda x, w=ws[s]: stage_fn(w, x))(want)
+    return want
+
+
+@pytest.mark.parametrize("num_stages,num_mb", [(4, 2), (4, 1), (8, 3)])
+def test_gpipe_fewer_microbatches_than_stages(num_stages, num_mb):
+    """M < P runs the full (M + P − 1)-tick schedule correctly: every
+    microbatch still crosses every stage even though most ticks idle."""
+    from repro.dist.pipeline_par import gpipe_forward
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((num_stages,), ("pipe",))
+    ws, xs, stage_fn = _gpipe_system(num_stages, num_mb)
+    got = gpipe_forward(stage_fn, ws, xs, mesh=mesh, axis="pipe")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_gpipe_reference(ws, xs, stage_fn)), atol=1e-5
+    )
+
+
+def test_gpipe_single_stage_is_plain_forward():
+    """P = 1 degenerates to a plain per-microbatch forward (no permute, no
+    bubble) and matches the sequential reference exactly."""
+    from repro.dist.pipeline_par import gpipe_forward
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("pipe",))
+    ws, xs, stage_fn = _gpipe_system(1, 4)
+    got = gpipe_forward(stage_fn, ws, xs, mesh=mesh, axis="pipe")
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(_gpipe_reference(ws, xs, stage_fn)), atol=1e-6
+    )

@@ -11,7 +11,7 @@ from repro.configs.base import get_config
 from repro.kernels.paged_attn import paged_decode_attention, paged_decode_attention_ref
 from repro.models import lm
 from repro.serve.engine import Engine, GenRequest
-from repro.serve.paged import SCRAP_PAGE, PagePool, PrefixCache, prefix_chain
+from repro.serve.paged import SCRAP_PAGE, PagePool, PrefixCache, ShardedPagePool, prefix_chain
 from repro.utils.hlo import primitive_count
 
 
@@ -361,3 +361,116 @@ def test_eos_works_in_dense_mode_mixed_batch(setup, dense_engine):
     np.testing.assert_array_equal(outs[0], base[0][: len(p1) + 2])
     np.testing.assert_array_equal(outs[1], base[1])
     assert eng.stats.early_exits == 1
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded serving (ISSUE 10): per-shard pools, bitwise identity
+# ---------------------------------------------------------------------------
+def test_sharded_page_pool_disjoint_ranges():
+    pool = ShardedPagePool(shards=4, pages_per_shard=4, page_size=8)
+    assert pool.capacity == 12 and pool.shard_capacity == 3
+    assert [pool.scrap(k) for k in range(4)] == [0, 4, 8, 12]
+    a = pool.alloc(3, shard=1)
+    assert a is not None and all(4 < p < 8 for p in a)
+    assert pool.shard_used() == [0, 3, 0, 0]
+    # all-or-nothing WITHIN the shard: shard 1 is full, shard 2 has room,
+    # but pages are never borrowed across shards
+    assert pool.alloc(1, shard=1) is None
+    assert pool.failed_allocs == 1
+    b = pool.alloc(2, shard=2)
+    assert all(8 < p < 12 for p in b)
+    # retain/release route by global id range
+    pool.retain(a + b)
+    assert pool.refcount(a[0]) == 2 and pool.refcount(b[0]) == 2
+    pool.release(a + b)
+    pool.release(a + b)
+    assert pool.free == pool.capacity and pool.used == 0
+    # scrap pages are never allocatable or releasable
+    with pytest.raises(ValueError):
+        pool.release([pool.scrap(2)])
+
+
+def test_sharded_serve_bitwise_identical_to_single_device(setup):
+    """Acceptance: per-request outputs of a shards>1 paged serve are
+    bitwise-identical to the single-device paged serve (per-slot rows are
+    computed independently, so shard placement must not change a bit)."""
+    cfg, params = setup
+    reqs = _ragged_requests(cfg)
+    base = Engine(params, cfg, max_len=64, slots=4, bucket=4,
+                  paged=True, page_size=8)
+    want = base.serve(_ragged_requests(cfg))
+    eng = Engine(params, cfg, max_len=64, slots=4, bucket=4,
+                 paged=True, page_size=8, shards=4)
+    got = eng.serve(reqs)
+    assert len(got) == len(want)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    # per-shard accounting is live: peak cost was tracked for every shard
+    assert len(eng.stats.shard_peak_cost) == 4
+    assert all(c > 0 for c in eng.stats.shard_peak_cost)
+
+
+def test_mesh_sharded_serve_bitwise_and_parked_pool(setup):
+    """mesh= derives the shard count from the mesh axis; outputs stay
+    bitwise-identical, and a SECOND serve() (which reuses the mesh-parked
+    KV pool) is bitwise-identical too."""
+    from repro.launch.mesh import make_mesh
+
+    cfg, params = setup
+    mesh = make_mesh((8,), ("model",))
+    base = Engine(params, cfg, max_len=64, slots=8, bucket=4,
+                  paged=True, page_size=8)
+    want = base.serve(_ragged_requests(cfg))
+    eng = Engine(params, cfg, max_len=64, slots=8, bucket=4,
+                 paged=True, page_size=8, mesh=mesh)
+    assert eng.shards == 8
+    for w, g in zip(want, eng.serve(_ragged_requests(cfg))):
+        np.testing.assert_array_equal(w, g)
+    for w, g in zip(want, eng.serve(_ragged_requests(cfg))):
+        np.testing.assert_array_equal(w, g)
+
+
+def test_sharded_serve_balances_shard_cost(setup):
+    """The shard-aware take() keeps per-shard peak cost closer together
+    than the worst case (all heavy requests on one shard)."""
+    cfg, params = setup
+    rng = np.random.default_rng(7)
+    # two heavy + two light requests, admitted into 4 slots over 2 shards
+    reqs = [
+        GenRequest(tokens=rng.integers(0, cfg.vocab_size, (s,)).astype(np.int32),
+                   max_new_tokens=n, temperature=0.0, seed=i)
+        for i, (s, n) in enumerate([(12, 12), (12, 12), (2, 2), (2, 2)])
+    ]
+    eng = Engine(params, cfg, max_len=64, slots=4, bucket=4,
+                 paged=True, page_size=8, shards=2)
+    eng.serve(reqs)
+    peak = eng.stats.shard_peak_cost
+    assert len(peak) == 2
+    # each shard got one heavy + one light request, not heavy+heavy
+    assert max(peak) < 2 * 24 and min(peak) > 0
+    assert abs(peak[0] - peak[1]) < 24
+
+
+def test_sharded_prefix_cache_is_shard_local(setup):
+    """Prefix reuse still works sharded — but an entry only hits for slots
+    on its own shard (pages are never borrowed across shards)."""
+    cfg, params = setup
+    rng = np.random.default_rng(21)
+    shared = rng.integers(0, cfg.vocab_size, (16,)).astype(np.int32)
+    reqs = [GenRequest(np.concatenate([shared, rng.integers(0, cfg.vocab_size, (2,)).astype(np.int32)]),
+                       max_new_tokens=3, temperature=0.0, seed=50 + i)
+            for i in range(4)]
+    base = Engine(params, cfg, max_len=64, slots=2, bucket=4,
+                  paged=True, page_size=8)
+    want = base.serve(reqs)
+    eng = Engine(params, cfg, max_len=64, slots=2, bucket=4,
+                 paged=True, page_size=8, shards=2)
+    got = eng.serve(reqs)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    hits = sum(c.hits for c in eng.prefix_caches if c is not None)
+    assert hits >= 1  # same-shard reuse happened
+    # every cached page lives on its cache's own shard
+    for k, c in enumerate(eng.prefix_caches):
+        for page in c.pages.values():
+            assert eng.pool.shard_of(page) == k

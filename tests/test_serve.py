@@ -237,6 +237,40 @@ def test_scheduler_fifo_window_bounds_overtaking():
     assert payloads <= {"first", "r0", "r1", "r2"}
 
 
+def test_scheduler_shard_balanced_order():
+    """With shards=/shard_load= the CHOICE of requests is unchanged; only
+    the return order permutes so the heaviest pick lands on the
+    lightest-loaded shard."""
+    sched = Scheduler()
+    for i, c in enumerate([10, 1, 7, 3]):
+        sched.submit(i, bucket=0, cost=c)
+    # 4 slots on shards [0, 0, 1, 1]; shard 0 already carries 20 cost
+    picked = sched.take(4, shards=[0, 0, 1, 1], shard_load=[20.0, 0.0])
+    assert sorted(r.cost for r in picked) == [1, 3, 7, 10]  # same picks
+    # heaviest two go to shard 1's slots (positions 2 and 3)
+    assert sorted(r.cost for r in picked[2:]) == [7, 10]
+    assert sched.stats.shard_balanced == 4
+    # without shards= the order is untouched and the stat stays zero
+    sched2 = Scheduler()
+    for i, c in enumerate([10, 1, 7, 3]):
+        sched2.submit(i, bucket=0, cost=c)
+    assert [r.cost for r in sched2.take(4, equalize=False)] == [10, 1, 7, 3]
+    assert sched2.stats.shard_balanced == 0
+
+
+def test_scheduler_shard_balance_spreads_evenly():
+    """Heavy requests spread across shards instead of stacking on whichever
+    shard's slots freed first."""
+    sched = Scheduler()
+    for i, c in enumerate([9, 9, 1, 1]):
+        sched.submit(i, bucket=0, cost=c)
+    picked = sched.take(4, equalize=False, shards=[0, 0, 1, 1], shard_load=[0.0, 0.0])
+    load = [0.0, 0.0]
+    for pos, r in enumerate(picked):
+        load[[0, 0, 1, 1][pos]] += r.cost
+    assert load == [10.0, 10.0]
+
+
 def test_zero_token_budget_rejected(setup):
     cfg, params = setup
     eng = Engine(params, cfg, max_len=32)

@@ -129,6 +129,40 @@ def test_nearest_size_guard(no_cache):
     assert cache.best(far, ["pallas", "xla_scalar"]) is None
 
 
+def test_cache_devices_exact_key_field(tmp_path):
+    """`devices` is an exact-match key field (like `tolerance`): a mesh
+    measurement never steers single-device dispatch, nor another mesh size,
+    and pre-devices cache rows load as devices=1."""
+    row8 = {
+        "op": "factor", "structure": "banded", "dtype": "float32", "bw": 16,
+        "n": 16384, "devices": 8, "times_us": {"spike": 10.0, "replicated": 99.0},
+    }
+    cache = AutotuneCache(entries=[dict(row8)])
+    p8 = Problem(op="factor", structure="banded", n=16384, bw=16, devices=8)
+    p1 = Problem(op="factor", structure="banded", n=16384, bw=16)
+    p4 = Problem(op="factor", structure="banded", n=16384, bw=16, devices=4)
+    assert cache.best(p8, ["spike", "replicated"]) == "spike"
+    assert cache.best(p1, ["spike", "replicated"]) is None
+    assert cache.best(p4, ["spike", "replicated"]) is None
+    # recording the single-device shape keys a DISTINCT row, and both
+    # round-trip with the devices field intact
+    cache.record(p1, {"pallas_blocked": 5.0})
+    assert len(cache.entries) == 2
+    path = tmp_path / "c.json"
+    cache.path = str(path)
+    cache.save()
+    loaded = AutotuneCache.load(str(path))
+    assert loaded.best(p8, ["spike", "replicated"]) == "spike"
+    assert loaded.best(p1, ["pallas_blocked", "spike"]) == "pallas_blocked"
+    # a pre-devices row (field absent) deserializes as a devices=1 row
+    legacy = dict(row8)
+    del legacy["devices"]
+    path.write_text(json.dumps({"version": 1, "entries": [legacy]}))
+    legacy_cache = AutotuneCache.load(str(path))
+    assert legacy_cache.best(p1, ["spike", "replicated"]) == "spike"
+    assert legacy_cache.best(p8, ["spike", "replicated"]) is None
+
+
 def test_cache_roundtrip_and_record_merge(tmp_path):
     path = tmp_path / "c.json"
     cache = AutotuneCache(path=str(path))

@@ -1,0 +1,231 @@
+"""SPIKE split banded solve (ISSUE 10): capability predicate and degenerate
+shapes, devices=1 bitwise collapse onto the local blocked solver, the
+shard_map Pallas path's bitwise identity with its pure-jnp mirror under the
+8-host-device conftest, registry dispatch (spike vs replicated, escalation
+funnel demotion), SpikeFactors substitution through the public ops, and
+SolveService mesh routing."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import solvers
+from repro.core import spike as cspike
+from repro.core.banded import make_banded_dd
+from repro.core.factorization import Factorization
+from repro.core.spike import SpikeFactors, spike_supported
+from repro.kernels import ops as kops
+from repro.kernels import spike as kspike
+from repro.launch.mesh import make_mesh
+from repro.solvers import Problem, candidates, select
+from repro.solvers import cache as scache
+
+
+@pytest.fixture
+def no_cache(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_SOLVERS_CACHE", str(tmp_path / "absent.json"))
+    scache.invalidate()
+    yield
+    scache.invalidate()
+
+
+@pytest.fixture(scope="module")
+def mesh8():
+    return make_mesh((8,), ("model",))
+
+
+def _system(n, bw, rhs=0, seed=0):
+    arow = make_banded_dd(jax.random.PRNGKey(seed), n, bw)
+    shape = (n,) if rhs == 0 else (n, rhs)
+    b = jax.random.normal(jax.random.PRNGKey(seed + 1), shape)
+    return arow, b
+
+
+def _local_solve(arow, b, bw):
+    return kops.banded_solve(kops.banded_lu(arow, bw=bw), b, bw=bw)
+
+
+# ---------------------------------------------------------------------------
+# capability predicate + degenerate shapes (satellite: degenerate-shape tests)
+# ---------------------------------------------------------------------------
+def test_spike_supported_predicate():
+    assert spike_supported(512, 8, 8)
+    assert spike_supported(512, 8, 1)  # d=1: trivially one partition
+    # 2*bw must fit the partition: ceil(64/8)=8 rows < 2*16
+    assert not spike_supported(64, 16, 8)
+    assert spike_supported(64, 4, 8)
+    assert not spike_supported(64, 4, 0)  # nonsense device counts
+    assert not spike_supported(64, 0, 4)  # pure diagonal: nothing to split
+    assert not spike_supported(0, 4, 4)
+    # boundary: 2*bw == m exactly is admitted; one row fewer is not
+    assert spike_supported(64, 4, 8) and not spike_supported(56, 4, 8)
+
+
+def test_wide_band_rejected_by_predicate_not_crash(mesh8, no_cache):
+    """bw >= n/devices must route to the replicated fallback through the
+    registry — never reach the SPIKE partition code."""
+    n, bw, d = 64, 16, 8
+    p = Problem(op="factor", structure="banded", n=n, bw=bw, devices=d)
+    names = [b.name for b in candidates(p)]
+    assert "spike" not in names and "replicated" in names
+    arow, b = _system(n, bw)
+    factors = kops.banded_lu(arow, bw=bw, mesh=mesh8)
+    assert isinstance(factors, Factorization)  # replicated == local artifact
+    x = kops.banded_solve(factors, b, bw=bw)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(_local_solve(arow, b, bw)))
+
+
+def test_spike_devices1_collapses_bitwise(no_cache):
+    """One partition == the local blocked factor/solve, bit for bit."""
+    arow, b = _system(96, 4)
+    x = cspike.spike_solve(cspike.spike_lu(arow, bw=4, devices=1), b)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(_local_solve(arow, b, 4)))
+
+
+def test_spike_nondivisible_n(no_cache):
+    """n % devices != 0 pads the last partition; answers stay accurate and
+    the factors carry the true n."""
+    n, bw, d = 100, 4, 3  # ceil(100/3)=34, last partition ragged
+    arow, b = _system(n, bw, rhs=2)
+    f = cspike.spike_lu(arow, bw=bw, devices=d)
+    assert (f.n, f.devices, f.m) == (n, d, 34)
+    x = cspike.spike_solve(f, b)
+    assert x.shape == (n, 2)
+    ref = _local_solve(arow, b, bw)
+    assert float(jnp.max(jnp.abs(x - ref))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# kernel path == pure-jnp mirror, bitwise (acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,bw,rhs", [(512, 8, 0), (512, 8, 3), (96, 4, 2)])
+def test_spike_sharded_bitwise_vs_mirror(mesh8, no_cache, n, bw, rhs):
+    arow, b = _system(n, bw, rhs=rhs)
+    fk = kspike.spike_lu_sharded(arow, bw=bw, mesh=mesh8)
+    fm = cspike.spike_lu(arow, bw=bw, devices=8)
+    for ak, am in zip(jax.tree.leaves(fk), jax.tree.leaves(fm)):
+        np.testing.assert_array_equal(np.asarray(ak), np.asarray(am))
+    xk = kspike.spike_solve_sharded(fk, b, mesh=mesh8)
+    xm = cspike.spike_solve(fm, b)
+    np.testing.assert_array_equal(np.asarray(xk), np.asarray(xm))
+    # fused linear_solve path too
+    xl = kspike.spike_linear_solve_sharded(arow, b, bw=bw, mesh=mesh8)
+    np.testing.assert_array_equal(np.asarray(xl), np.asarray(xm))
+
+
+def test_spike_answer_close_to_local(mesh8, no_cache):
+    arow, b = _system(512, 8, rhs=2)
+    x = kspike.spike_linear_solve_sharded(arow, b, bw=8, mesh=mesh8)
+    ref = _local_solve(arow, b, 8)
+    assert float(jnp.max(jnp.abs(x - ref))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# public ops + registry dispatch
+# ---------------------------------------------------------------------------
+def test_ops_mesh_dispatch_returns_spike_factors(mesh8, no_cache):
+    arow, b = _system(512, 8, rhs=2)
+    f = kops.banded_lu(arow, bw=8, mesh=mesh8)
+    assert isinstance(f, SpikeFactors)
+    x = kops.banded_solve(f, b, bw=8, mesh=mesh8)
+    xm = cspike.spike_solve(cspike.spike_lu(arow, bw=8, devices=8), b)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(xm))
+    # meshless substitution on SpikeFactors takes the mirror — same bits
+    x2 = kops.banded_solve(f, b, bw=8)
+    np.testing.assert_array_equal(np.asarray(x2), np.asarray(xm))
+
+
+def test_ops_mesh_rejects_single_device_impl(mesh8, no_cache):
+    arow, _ = _system(512, 8)
+    with pytest.raises(ValueError, match="single-device"):
+        kops.banded_lu(arow, bw=8, mesh=mesh8, impl="pallas_blocked")
+
+
+def test_spike_health_screen_passes_well_conditioned(mesh8, no_cache):
+    arow, _ = _system(512, 8)
+    f, rec = kops.banded_lu(arow, bw=8, mesh=mesh8, health=True)
+    assert isinstance(f, SpikeFactors) and rec.verdict
+
+
+def test_spike_demotes_to_replicated_via_funnel(mesh8, no_cache):
+    """A validator rejecting the SPIKE attempt must escalate to the
+    replicated backend (PR-7 funnel), not fail the dispatch."""
+    n, bw = 512, 8
+    arow, _ = _system(n, bw)
+    p = Problem(op="factor", structure="banded", n=n, bw=bw, devices=8)
+
+    def reject_spike(problem, backend, result):
+        if backend.name == "spike":
+            return ("synthetic reject", None)
+        return None
+
+    with solvers.record_escalations() as log:
+        factors = solvers.dispatch(p, arow, bw=bw, validate=reject_spike)
+    assert [(f, nxt) for _, f, nxt, _ in log] == [("spike", "replicated")]
+    assert not isinstance(factors, SpikeFactors)
+    # the demotion is remembered for screened dispatches on this shape key
+    with solvers.record_escalations() as log2:
+        solvers.dispatch(p, arow, bw=bw, validate=reject_spike)
+    assert log2 == []
+    # ...but is keyed on devices: the single-device candidate set (disjoint
+    # backends) is untouched by the mesh demotion
+    p1 = Problem(op="factor", structure="banded", n=n, bw=bw)
+    assert "spike" not in [b.name for b in candidates(p1)]
+    solvers.registry._DEMOTIONS.clear()
+
+
+# ---------------------------------------------------------------------------
+# SolveService mesh routing (tentpole b)
+# ---------------------------------------------------------------------------
+def test_solve_service_routes_band_spanning_mesh_to_spike(mesh8, no_cache):
+    from repro.serve.solve_service import SolveService
+
+    n, bw = 512, 8
+    arow, _ = _system(n, bw)
+    bs = [jax.random.normal(jax.random.PRNGKey(10 + i), (n, 2)) for i in range(3)]
+    svc = SolveService(mesh=mesh8)
+    tix = [svc.submit(arow, b, bw=bw) for b in bs]
+    out = svc.flush()
+    tiers = next(iter(svc._lru.values()))
+    assert any(isinstance(v, SpikeFactors) for v in tiers.values())
+    assert svc.stats.factor_dispatches == 1  # coalesced: one SPIKE factor
+    ref = SolveService()
+    for t, b in zip(tix, bs):
+        want = ref.solve(arow, b, bw=bw)
+        assert float(jnp.max(jnp.abs(out[t] - want))) < 1e-4
+
+
+def test_solve_service_wide_band_stays_local(mesh8, no_cache):
+    from repro.serve.solve_service import SolveService
+
+    n, bw = 64, 16  # 2*bw > ceil(n/8): spike_supported is False
+    arow, b = _system(n, bw)
+    svc = SolveService(mesh=mesh8)
+    x = svc.solve(arow, b, bw=bw)
+    tiers = next(iter(svc._lru.values()))
+    assert all(not isinstance(v, SpikeFactors) for v in tiers.values())
+    want = SolveService().solve(arow, b, bw=bw)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# measured selection weighs SPIKE against replication per (n, bw, devices)
+# ---------------------------------------------------------------------------
+def test_measured_selection_spike_vs_replicated(no_cache):
+    from repro.solvers import AutotuneCache
+
+    p = Problem(op="factor", structure="banded", n=512, bw=8, devices=8)
+    prefer_spike = AutotuneCache(entries=[{
+        "op": "factor", "structure": "banded", "dtype": "float32", "bw": 8,
+        "n": 512, "devices": 8, "times_us": {"spike": 10.0, "replicated": 99.0},
+    }])
+    assert select(p, cache=prefer_spike).name == "spike"
+    prefer_repl = AutotuneCache(entries=[{
+        "op": "factor", "structure": "banded", "dtype": "float32", "bw": 8,
+        "n": 512, "devices": 8, "times_us": {"spike": 99.0, "replicated": 10.0},
+    }])
+    assert select(p, cache=prefer_repl).name == "replicated"
+    # no measurement: static priority prefers the split solve
+    assert select(p, cache=AutotuneCache()).name == "spike"
